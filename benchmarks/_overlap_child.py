@@ -1,0 +1,78 @@
+"""Child process for bench_overlap: lowers the distributed solvers on an
+8-device mesh and reports collective/matvec dependency structure as JSON.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (SolverConfig, pbicgsafe_solve,  # noqa: E402
+                        ssbicgsafe2_solve)
+from repro.core import matrices as M  # noqa: E402
+from repro.core.distributed import distributed_stencil_solve  # noqa: E402
+from repro.launch.hlo_analysis import (HloGraph,  # noqa: E402
+                                       split_computations)
+
+
+def analyze(solver, op, b_grid, mesh):
+    fn = jax.jit(lambda b: distributed_stencil_solve(
+        solver, op, b, mesh, config=SolverConfig(maxiter=100), jit=False))
+    text = fn.lower(b_grid).compile().as_text()
+    comps = split_computations(text)
+    # the solver body is the computation holding the fused-dots all-reduce
+    best = None
+    for name, body in comps.items():
+        g = HloGraph(body)
+        ars = [n for n in g.find("all-reduce")
+               if "9" in _result_dims(body, n)]
+        cps = g.find("collective-permute")
+        if ars and cps:
+            best = (name, g, ars, cps)
+            break
+    if best is None:
+        return {"error": "no body with all-reduce(9) + collective-permute"}
+    name, g, ars, cps = best
+    ar = ars[0]
+    indep = [cp for cp in cps if g.independent(ar, cp)]
+    dep_on_ar = [cp for cp in cps if g.depends_on(cp, ar)]
+    ar_dep_on = [cp for cp in cps if g.depends_on(ar, cp)]
+    return {
+        "computation": name,
+        "n_halo_permutes": len(cps),
+        "independent_of_reduction": len(indep),
+        "permutes_needing_reduction": len(dep_on_ar),
+        "reduction_needs_permutes": len(ar_dep_on),
+    }
+
+
+def main():
+    op, b, _ = M.convection_diffusion(16, peclet=1.0)
+    b_grid = b.reshape(16, 16, 16)
+    mesh = jax.make_mesh((8,), ("rows",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    out = {
+        "p-bicgsafe": analyze(pbicgsafe_solve, op, b_grid, mesh),
+        "ssbicgsafe2": analyze(ssbicgsafe2_solve, op, b_grid, mesh),
+    }
+    print(json.dumps(out))
+
+
+def _result_dims(body_text: str, opname: str) -> str:
+    for line in body_text.splitlines():
+        s = line.strip()
+        if s.startswith(f"%{opname} =") or s.startswith(f"{opname} =") or \
+                s.startswith(f"ROOT %{opname} =") or s.startswith(f"ROOT {opname} ="):
+            return s.split("=", 1)[1][:80]
+    return ""
+
+
+if __name__ == "__main__":
+    main()

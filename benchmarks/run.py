@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run [--quick]
+
+  bench_convergence   Table 5.2 + Fig 5.1  (iteration counts, histories)
+  bench_rr            §5.2 / Fig 5.2       (residual replacement)
+  bench_cost          Table 3.1            (per-iteration op counts)
+  bench_overlap       §3 Fig 3.1 + Fig 5.3 (HLO overlap proof + model)
+  bench_scaling       Fig 5.3 companion    (measured per-iter work)
+  bench_roofline      §Roofline            (terms from dry-run artifacts)
+
+Artifacts land in experiments/*.json; stdout is the human summary.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem set (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of bench names")
+    args = ap.parse_args()
+
+    from . import (bench_convergence, bench_cost, bench_overlap, bench_rr,
+                   bench_roofline, bench_scaling)
+
+    benches = {
+        "convergence": bench_convergence.run,
+        "rr": bench_rr.run,
+        "cost": bench_cost.run,
+        "overlap": bench_overlap.run,
+        "scaling": bench_scaling.run,
+        "roofline": bench_roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    failures = []
+    for name, fn in benches.items():
+        t0 = time.time()
+        print(f"\n################ {name} ################")
+        try:
+            fn(quick=args.quick)
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[{name}] FAILED")
+    if failures:
+        print(f"\nFAILED benches: {failures}")
+        sys.exit(1)
+    print("\nall benches ok")
+
+
+if __name__ == "__main__":
+    main()

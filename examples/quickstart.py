@@ -1,0 +1,49 @@
+"""Quickstart: the paper's solver in 30 lines + a tiny LM train step.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (SolverConfig, bicgstab_solve, pbicgsafe_solve,  # noqa: E402
+                        ssbicgsafe2_solve)
+from repro.core import matrices as M  # noqa: E402
+
+
+def solver_demo():
+    print("== p-BiCGSafe vs baselines on a convection-diffusion system ==")
+    op, b, x_true = M.convection_diffusion(24, peclet=1.0)  # 13824 rows
+    for name, solve in (("BiCGStab", bicgstab_solve),
+                        ("ssBiCGSafe2", ssbicgsafe2_solve),
+                        ("p-BiCGSafe", pbicgsafe_solve)):
+        res = solve(op.matvec, b, config=SolverConfig(tol=1e-8))
+        err = float(jnp.linalg.norm(res.x - x_true)
+                    / jnp.linalg.norm(x_true))
+        print(f"  {name:12s} iterations={int(res.iterations):4d} "
+              f"relres={float(res.relres):.2e} x_err={err:.2e}")
+
+
+def lm_demo():
+    print("\n== 5 training steps of a reduced qwen3 config ==")
+    from repro.configs import smoke_config
+    from repro.data import DataConfig
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, train
+
+    cfg = smoke_config("qwen3-8b")
+    out = train(cfg,
+                DataConfig(batch_size=2, seq_len=32,
+                           vocab_size=cfg.vocab_size),
+                TrainConfig(steps=5, ckpt_every=100,
+                            ckpt_dir="/tmp/repro-quickstart",
+                            opt=AdamWConfig(lr=1e-3)))
+    for h in out["history"]:
+        print(f"  step {h['step']}: loss {h['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    solver_demo()
+    lm_demo()

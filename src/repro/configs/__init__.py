@@ -1,0 +1,5 @@
+from .base import (ARCHS, SHAPES, applicable, get_config, input_specs,
+                   skip_reason, smoke_config)
+
+__all__ = ["ARCHS", "SHAPES", "applicable", "get_config", "input_specs",
+           "skip_reason", "smoke_config"]

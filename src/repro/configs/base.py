@@ -1,0 +1,119 @@
+"""Architecture registry + input shapes (the assigned 10 × 4 grid).
+
+``get_config(arch)`` returns the exact assigned full-size config;
+``smoke_config(arch)`` a reduced same-family config for CPU tests;
+``input_specs(cfg, shape)`` ShapeDtypeStruct stand-ins for every input of
+the step function the shape exercises (train_step / prefill_step /
+serve_step) — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_cache
+
+ARCH_IDS = [
+    "phi3-mini-3.8b", "qwen2.5-32b", "qwen3-8b", "qwen1.5-110b",
+    "deepseek-v3-671b", "llama4-scout-17b-a16e", "zamba2-1.2b",
+    "xlstm-350m", "whisper-tiny", "qwen2-vl-72b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str       # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    mod = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+ARCHS = ARCH_IDS  # alias
+
+
+# ---------------------------------------------------------------------------
+# applicability (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+_FULL_ATTN = {"phi3-mini-3.8b", "qwen2.5-32b", "qwen3-8b", "qwen1.5-110b",
+              "deepseek-v3-671b", "llama4-scout-17b-a16e", "qwen2-vl-72b",
+              "whisper-tiny"}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch in _FULL_ATTN:
+        return ("full-attention backbone: 500k-token KV decode is "
+                "quadratic-prefill/huge-KV; run only for SSM/hybrid archs "
+                "(DESIGN.md §4)")
+    return None
+
+
+def applicable(arch: str, shape: str) -> bool:
+    return skip_reason(arch, shape) is None
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                arch: str = "") -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for the step function of ``shape``.
+
+    train:   {"batch": {tokens[, frames, patch_embeds, positions]}}
+    prefill: {"batch": {...}}                                (no labels)
+    decode:  {"tokens": (B,1), "cache": <tree>, "cache_len": scalar}
+    """
+    sp = SHAPES[shape]
+    B, S = sp.global_batch, sp.seq_len
+    toks = _sds((B, S), jnp.int32)
+
+    if sp.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": toks}
+        if cfg.family == "audio":
+            # frontend stub: precomputed post-conv frame embeddings
+            batch["frames"] = _sds((B, S, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            n_patch = min(1024, S - 2)
+            batch["patch_embeds"] = _sds((B, n_patch, cfg.d_model), cfg.dtype)
+            batch["positions"] = _sds((B, S, 3), jnp.int32)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S,
+                           enc_len=1500 if cfg.family == "audio" else 0))
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "cache": cache,
+        "cache_len": _sds((), jnp.int32),
+    }

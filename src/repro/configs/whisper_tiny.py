@@ -1,0 +1,21 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend stubbed (input_specs
+provides post-conv frame embeddings).  [arXiv:2212.04356]
+
+Note: decode_32k exercises the decoder mechanically far beyond whisper's
+448-token convention (dec_pos_embed sized 32768 for lowering); long_500k is
+skipped (full attention).  DESIGN.md §4.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, n_encoder_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab_size=51865,
+    is_encoder_decoder=True, frontend_stub=True, tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, n_encoder_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+                          remat="none")

@@ -1,0 +1,44 @@
+"""repro.core — the paper's contribution: pipelined BiCGSafe solvers.
+
+Public API:
+
+* Solvers (all ``(matvec, b, x0=None, *, config, r0_star, dot_reduce)``):
+  - :func:`bicgstab_solve`        BiCGStab            (Alg. 2.1, 2 syncs)
+  - :func:`pbicgstab_solve`       pipelined BiCGStab  (Cools-Vanroose, 2 overlapped)
+  - :func:`gpbicg_solve`          GPBi-CG             (Alg. 2.2, 3 syncs)
+  - :func:`ssbicgsafe2_solve`     ssBiCGSafe2         (Alg. 2.3, 1 sync)
+  - :func:`pbicgsafe_solve`       p-BiCGSafe          (Alg. 3.1, 1 overlapped sync)
+  - :func:`pbicgsafe_rr_solve`    p-BiCGSafe-rr       (Alg. 4.1)
+* Operators: Dense/CSR/ELL/Stencil7 + Jacobi preconditioner.
+* Problem generators: :mod:`repro.core.matrices`.
+* Distributed driver: :mod:`repro.core.distributed`.
+"""
+from .types import SolveResult, SolverConfig, identity_reduce
+from .linear_operator import (CSROperator, DenseOperator, ELLOperator,
+                              JacobiPreconditioner, Stencil7Operator,
+                              as_matvec, preconditioned_matvec)
+from .bicgstab import bicgstab_solve
+from .cgs import cgs_solve
+from .pipelined_bicgstab import pbicgstab_solve
+from .gpbicg import gpbicg_solve
+from .ssbicgsafe import ssbicgsafe2_solve
+from .pipelined_bicgsafe import pbicgsafe_solve, pbicgsafe_rr_solve
+
+SOLVERS = {
+    "bicgstab": bicgstab_solve,
+    "p-bicgstab": pbicgstab_solve,
+    "gpbicg": gpbicg_solve,
+    "cgs": cgs_solve,
+    "ssbicgsafe2": ssbicgsafe2_solve,
+    "p-bicgsafe": pbicgsafe_solve,
+    "p-bicgsafe-rr": pbicgsafe_rr_solve,
+}
+
+__all__ = [
+    "SolveResult", "SolverConfig", "identity_reduce",
+    "CSROperator", "DenseOperator", "ELLOperator", "JacobiPreconditioner",
+    "Stencil7Operator", "as_matvec", "preconditioned_matvec",
+    "bicgstab_solve", "pbicgstab_solve", "gpbicg_solve",
+    "ssbicgsafe2_solve", "pbicgsafe_solve", "pbicgsafe_rr_solve",
+    "SOLVERS",
+]

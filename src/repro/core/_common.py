@@ -1,0 +1,101 @@
+"""Shared machinery for the Krylov solvers.
+
+The central abstraction is the *fused dot phase*: every solver computes all
+inner products of one synchronization phase as a single stacked vector of
+local partial sums and calls ``dot_reduce`` exactly once on it.  Standalone,
+``dot_reduce`` is the identity (the dots are already global); inside the
+``shard_map``-distributed driver it is a single ``lax.psum`` — one global
+reduction per phase, which is the paper's communication model.  The number
+of ``dot_reduce`` calls per iteration therefore *is* the solver's
+synchronization count (1 for ssBiCGSafe2/p-BiCGSafe, 2 for BiCGStab and
+p-BiCGStab, 3 for GPBi-CG), and tests assert it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import SolverConfig
+
+
+def local_dots(pairs: Sequence[Tuple[jax.Array, jax.Array]],
+               dtype=None) -> jax.Array:
+    """Stack partial inner products <a,b> for each pair into one vector.
+
+    On a sharded vector this yields the *local* partial sums; a single
+    reduction of the stacked vector produces every global inner product of
+    the phase at once (8 scalars -> one 8-word message, as in the paper).
+    """
+    outs = []
+    for a, b in pairs:
+        acc = jnp.sum(a * b, dtype=dtype) if dtype is not None else jnp.vdot(a, b)
+        outs.append(acc)
+    return jnp.stack(outs)
+
+
+def safe_div(num: jax.Array, den: jax.Array, eps: float):
+    """num/den with breakdown detection: returns (value, is_breakdown)."""
+    bad = jnp.abs(den) <= eps
+    val = num / jnp.where(bad, jnp.ones_like(den), den)
+    return jnp.where(bad, jnp.zeros_like(val), val), bad
+
+
+def init_guess(b: jax.Array, x0: Optional[jax.Array]) -> jax.Array:
+    return jnp.zeros_like(b) if x0 is None else x0.astype(b.dtype)
+
+
+def tree_select(pred, on_true, on_false):
+    """Elementwise select over matching pytrees (pred is a scalar bool)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+def bicgsafe_coefficients(dots: jax.Array, i: jax.Array,
+                          alpha_prev, zeta_prev, f_prev, eps: float):
+    """Coefficients shared by ssBiCGSafe2 (Alg 2.3) and p-BiCGSafe (Alg 3.1).
+
+    ``dots = [a, b, c, d, e, f, g, h, rr]`` with
+      a=(s,s) b=(y,y) c=(s,y) d=(s,r) e=(y,r)
+      f=(r0*,r) g=(r0*,s) h=(r0*,t_{i-1}) rr=(r,r).
+
+    i = 0:  beta=0, alpha=f/g, zeta=d/a, eta=0          (paper lines 10-14)
+    i > 0:  beta=(alpha_{i-1} f)/(zeta_{i-1} f_{i-1}),
+            alpha=f/(g + beta h),
+            zeta=(b d - c e)/(a b - c^2),
+            eta =(a e - c d)/(a b - c^2)                (paper lines 16-20)
+
+    Returns (beta, alpha, zeta, eta, f, rr, breakdown).
+    """
+    a, b, c, d, e, f, g, h, rr = (dots[k] for k in range(9))
+    first = i == 0
+
+    beta_g, bad_beta = safe_div(alpha_prev * f, zeta_prev * f_prev, eps)
+    beta = jnp.where(first, jnp.zeros_like(f), beta_g)
+
+    alpha, bad_alpha = safe_div(f, g + beta * h, eps)
+
+    zeta0, bad_z0 = safe_div(d, a, eps)
+    denom = a * b - c * c
+    zeta_g, bad_zg = safe_div(b * d - c * e, denom, eps)
+    eta_g, _ = safe_div(a * e - c * d, denom, eps)
+    zeta = jnp.where(first, zeta0, zeta_g)
+    eta = jnp.where(first, jnp.zeros_like(f), eta_g)
+
+    breakdown = jnp.where(
+        first, bad_z0 | bad_alpha,
+        bad_beta | bad_alpha | bad_zg)
+    return beta, alpha, zeta, eta, f, rr, breakdown
+
+
+class SyncCounter:
+    """Trace-time counter of dot_reduce invocations (sync phases/iter)."""
+
+    def __init__(self, reduce_fn):
+        self._fn = reduce_fn
+        self.calls = 0
+
+    def __call__(self, partials):
+        self.calls += 1
+        return self._fn(partials)

@@ -1,0 +1,88 @@
+"""CGS — Conjugate Gradient Squared (Sonneveld 1989).
+
+The pre-BiCGStab product-type baseline: applies the BiCG polynomial twice
+(r_i = R_i(A)^2 r_0).  Converges erratically (squared residual polynomial
+amplifies round-off) — included as the historical baseline the
+stabilized family (BiCGStab -> GPBi-CG -> BiCGSafe) improves upon, and as
+an extra convergence-comparison row in bench_convergence.
+Two reduction phases per iteration.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ._common import init_guess, local_dots, safe_div, tree_select
+from .types import (DotReduce, SolveResult, SolverConfig, history_init,
+                    history_update, identity_reduce)
+
+
+def cgs_solve(matvec: Callable,
+              b: jax.Array,
+              x0: Optional[jax.Array] = None,
+              *,
+              config: SolverConfig = SolverConfig(),
+              r0_star: Optional[jax.Array] = None,
+              dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+    """Solve A x = b with CGS."""
+    eps = config.breakdown_threshold(b.dtype)
+    x = init_guess(b, x0)
+    r0 = b - matvec(x) if x0 is not None else b
+    rs = r0 if r0_star is None else r0_star.astype(b.dtype)
+
+    init = dot_reduce(local_dots([(r0, r0), (rs, r0)]))
+    norm_r0 = jnp.sqrt(init[0])
+    z0 = jnp.zeros_like(b)
+    hist = history_init(config, norm_r0.dtype)
+
+    state = dict(
+        x=x, r=r0, p=r0, u=r0, q=z0,
+        rho=init[1], rr=init[0],
+        i=jnp.zeros((), jnp.int32),
+        relres=jnp.ones((), norm_r0.dtype),
+        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        hist=hist)
+
+    def cond(st):
+        return (~st["converged"]) & (~st["breakdown"]) & (st["i"] < config.maxiter)
+
+    def body(st):
+        relres = jnp.sqrt(jnp.abs(st["rr"])) / norm_r0
+        done = relres <= config.tol
+        hist_i = history_update(st["hist"], st["i"], relres, config)
+
+        p, u, r = st["p"], st["u"], st["r"]
+        vp = matvec(p)
+        # --- phase 1 ---
+        d1 = dot_reduce(local_dots([(rs, vp)]))
+        alpha, bad1 = safe_div(st["rho"], d1[0], eps)
+        q = u - alpha * vp
+        uq = u + q
+        x_next = st["x"] + alpha * uq
+        r_next = r - alpha * matvec(uq)
+        # --- phase 2 ---
+        d2 = dot_reduce(local_dots([(rs, r_next), (r_next, r_next)]))
+        rho_next = d2[0]
+        beta, bad2 = safe_div(rho_next, st["rho"], eps)
+        u_next = r_next + beta * q
+        p_next = u_next + beta * (q + beta * p)
+
+        bad = bad1 | bad2
+        new = dict(
+            x=x_next, r=r_next, p=p_next, u=u_next, q=q,
+            rho=rho_next, rr=d2[1],
+            i=st["i"] + 1, relres=relres,
+            converged=jnp.zeros((), bool), breakdown=bad,
+            hist=hist_i)
+        stopped = dict(st)
+        stopped.update(relres=relres, converged=done, hist=hist_i)
+        return tree_select(done, stopped, new)
+
+    st = jax.lax.while_loop(cond, body, state)
+    final_relres = jnp.where(st["converged"], st["relres"],
+                             jnp.sqrt(jnp.abs(st["rr"])) / norm_r0)
+    converged = st["converged"] | (final_relres <= config.tol)
+    return SolveResult(st["x"], st["i"], final_relres, converged,
+                       st["breakdown"], st["hist"])

@@ -1,0 +1,109 @@
+"""GPBi-CG (Zhang 1997; paper Alg. 2.2).
+
+Generalized product-type method: three-term stabilizing polynomial with
+coefficients (zeta, eta) minimizing ||t - eta*y - zeta*A t||.  Three
+synchronization phases per iteration (paper Fig. 3.1) — the convergence
+baseline that BiCGSafe/ssBiCGSafe improve upon.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ._common import init_guess, local_dots, safe_div, tree_select
+from .types import (DotReduce, SolveResult, SolverConfig, history_init,
+                    history_update, identity_reduce)
+
+
+def gpbicg_solve(matvec: Callable,
+                 b: jax.Array,
+                 x0: Optional[jax.Array] = None,
+                 *,
+                 config: SolverConfig = SolverConfig(),
+                 r0_star: Optional[jax.Array] = None,
+                 dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+    """Solve A x = b with GPBi-CG (Alg. 2.2)."""
+    eps = config.breakdown_threshold(b.dtype)
+    x = init_guess(b, x0)
+    r0 = b - matvec(x) if x0 is not None else b
+    rs = r0 if r0_star is None else r0_star.astype(b.dtype)
+
+    init = dot_reduce(local_dots([(r0, r0), (rs, r0)]))
+    norm_r0 = jnp.sqrt(init[0])
+    z0 = jnp.zeros_like(b)
+    hist = history_init(config, norm_r0.dtype)
+
+    zero = jnp.zeros((), b.dtype)
+    state = dict(
+        x=x, r=r0, p=z0, u=z0, t=z0, w=z0, z=z0,
+        rho=init[1],                       # (r0*, r_i)
+        beta=zero, zeta=jnp.ones((), b.dtype),
+        rr=init[0],
+        i=jnp.zeros((), jnp.int32),
+        relres=jnp.ones((), norm_r0.dtype),
+        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        hist=hist)
+
+    def cond(st):
+        return (~st["converged"]) & (~st["breakdown"]) & (st["i"] < config.maxiter)
+
+    def body(st):
+        relres = jnp.sqrt(jnp.abs(st["rr"])) / norm_r0
+        done = relres <= config.tol
+        hist_i = history_update(st["hist"], st["i"], relres, config)
+
+        r, beta = st["r"], st["beta"]
+        t_prev, w_prev, u_prev, z_prev = st["t"], st["w"], st["u"], st["z"]
+        first = st["i"] == 0
+
+        p = r + beta * (st["p"] - u_prev)                 # line 7
+        ap = matvec(p)                                    # line 8
+        # --- phase 1: alpha ---
+        d1 = dot_reduce(local_dots([(rs, ap)]))
+        alpha, bad1 = safe_div(st["rho"], d1[0], eps)
+
+        y = t_prev - r - alpha * w_prev + alpha * ap      # line 10
+        t = r - alpha * ap                                # line 11
+        at = matvec(t)                                    # line 12
+        # --- phase 2: a..e for (zeta, eta) ---
+        d2 = dot_reduce(local_dots([
+            (y, y), (at, t), (y, t), (at, y), (at, at)]))
+        a_, b_, c_, d_, e_ = (d2[k] for k in range(5))
+        zeta0, badz0 = safe_div(b_, e_, eps)              # line 15
+        den = e_ * a_ - d_ * d_
+        zeta_g, badzg = safe_div(a_ * b_ - c_ * d_, den, eps)   # line 18
+        eta_g, _ = safe_div(e_ * c_ - d_ * b_, den, eps)        # line 19
+        zeta = jnp.where(first, zeta0, zeta_g)
+        eta = jnp.where(first, jnp.zeros_like(zeta), eta_g)
+        bad2 = jnp.where(first, badz0, badzg)
+
+        u = zeta * ap + eta * (t_prev - r + beta * u_prev)      # line 21
+        z = zeta * r + eta * z_prev - alpha * u                 # line 22
+        x_next = st["x"] + alpha * p + z                        # line 23
+        r_next = t - eta * y - zeta * at                        # line 24
+        # --- phase 3: beta + residual norm ---
+        d3 = dot_reduce(local_dots([(rs, r_next), (r_next, r_next)]))
+        rho_next = d3[0]
+        beta_next_num = alpha * rho_next
+        beta_next, bad3 = safe_div(beta_next_num, zeta * st["rho"], eps)
+        w = at + beta_next * ap                                 # line 26
+
+        bad = bad1 | bad2 | bad3
+        new = dict(
+            x=x_next, r=r_next, p=p, u=u, t=t, w=w, z=z,
+            rho=rho_next, beta=beta_next, zeta=zeta, rr=d3[1],
+            i=st["i"] + 1, relres=relres,
+            converged=jnp.zeros((), bool), breakdown=bad,
+            hist=hist_i)
+        stopped = dict(st)
+        stopped.update(relres=relres, converged=done, hist=hist_i)
+        return tree_select(done, stopped, new)
+
+    st = jax.lax.while_loop(cond, body, state)
+    final_relres = jnp.where(st["converged"], st["relres"],
+                             jnp.sqrt(jnp.abs(st["rr"])) / norm_r0)
+    converged = st["converged"] | (final_relres <= config.tol)
+    return SolveResult(st["x"], st["i"], final_relres, converged,
+                       st["breakdown"], st["hist"])

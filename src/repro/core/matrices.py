@@ -1,0 +1,146 @@
+"""Synthetic test-problem generators.
+
+The paper evaluates on SuiteSparse matrices (unreachable offline); these
+generators produce matrices of the same *kinds* (paper Table 5.1 "kind"
+column) and difficulty spread:
+
+* :func:`poisson3d`            — SPD 7-point Laplacian            (≈ poisson3Db)
+* :func:`convection_diffusion` — non-symmetric fluid dynamics     (≈ atmosmodd)
+* :func:`anisotropic3d`        — badly scaled SPD                 (≈ s3dkq4m2)
+* :func:`random_nonsym`        — generic non-symmetric sparse     (≈ xenon2 etc.)
+* :func:`hard_nonsym`          — ill-conditioned non-symmetric; drives the
+  recurred residual of p-BiCGSafe into stagnation so that p-BiCGSafe-rr is
+  needed (≈ sherman3 / utm5940, paper §5.2).
+
+Every generator returns ``(operator, b, x_true)`` with the right-hand side
+built so the exact solution is the all-ones vector (paper §5 protocol).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .linear_operator import (CSROperator, DenseOperator, ELLOperator,
+                              Stencil7Operator)
+
+
+def _with_unit_solution(op) -> Tuple[object, jax.Array, jax.Array]:
+    x_true = jnp.ones((op.shape[0],), dtype=op.dtype)
+    b = op.matvec(x_true)
+    return op, b, x_true
+
+
+def poisson3d(nx: int = 16, ny: Optional[int] = None, nz: Optional[int] = None,
+              dtype=jnp.float64):
+    """SPD 7-point Laplacian on an nx×ny×nz grid (Dirichlet)."""
+    ny = ny or nx
+    nz = nz or nx
+    c = jnp.array([6.0, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0], dtype=dtype)
+    return _with_unit_solution(Stencil7Operator(c, nx, ny, nz))
+
+
+def convection_diffusion(nx: int = 16, ny: Optional[int] = None,
+                         nz: Optional[int] = None, peclet: float = 0.5,
+                         dtype=jnp.float64):
+    """Non-symmetric convection-diffusion (upwinded convection in x and y).
+
+    ``peclet`` controls the skew: 0 → symmetric Laplacian, larger → more
+    non-normal.  The paper's dominant matrix kind (fluid dynamics).
+    """
+    ny = ny or nx
+    nz = nz or nx
+    px, py = peclet, 0.5 * peclet
+    c = jnp.array([
+        6.0 + px + py,
+        -1.0 - px, -1.0,           # x- (upwind heavier), x+
+        -1.0 - py, -1.0,           # y-, y+
+        -1.0, -1.0,                # z-, z+
+    ], dtype=dtype)
+    return _with_unit_solution(Stencil7Operator(c, nx, ny, nz))
+
+
+def anisotropic3d(nx: int = 16, ny: Optional[int] = None,
+                  nz: Optional[int] = None, eps: float = 1e-3,
+                  dtype=jnp.float64):
+    """SPD but badly scaled: strong coupling in x, weak (eps) in y/z."""
+    ny = ny or nx
+    nz = nz or nx
+    c = jnp.array([2.0 + 4.0 * eps, -1.0, -1.0, -eps, -eps, -eps, -eps],
+                  dtype=dtype)
+    return _with_unit_solution(Stencil7Operator(c, nx, ny, nz))
+
+
+def random_nonsym(n: int = 2000, nnz_per_row: int = 8, seed: int = 0,
+                  diag_dominance: float = 1.2, dtype=np.float64,
+                  fmt: str = "csr"):
+    """Random sparse non-symmetric matrix, row-wise diagonally dominant.
+
+    ``diag_dominance > 1`` guarantees solvability; values near 1 make the
+    problem harder (more iterations), matching the paper's mid-range
+    matrices.
+    """
+    rng = np.random.default_rng(seed)
+    k = nnz_per_row - 1  # off-diagonals per row
+    cols = rng.integers(0, n, size=(n, k), dtype=np.int64)
+    vals = rng.standard_normal((n, k)).astype(dtype)
+    # remove accidental diagonal hits
+    row = np.arange(n)[:, None]
+    vals = np.where(cols == row, 0.0, vals)
+    diag = diag_dominance * np.abs(vals).sum(axis=1) + 1e-3
+
+    data = np.concatenate([diag[:, None], vals], axis=1).reshape(-1)
+    indices = np.concatenate([row, cols], axis=1).reshape(-1).astype(np.int32)
+    row_ids = np.repeat(np.arange(n, dtype=np.int32), nnz_per_row)
+    op = CSROperator(jnp.asarray(data), jnp.asarray(indices),
+                     jnp.asarray(row_ids), n)
+    if fmt == "ell":
+        op = ELLOperator.from_csr(op)
+    return _with_unit_solution(op)
+
+
+def hard_nonsym(n: int = 1500, seed: int = 3, scale_range: float = 8.0,
+                dtype=np.float64):
+    """Ill-conditioned non-symmetric matrix (paper §5.2 regime).
+
+    Tridiagonal-plus-random structure with log-uniform row scaling over
+    ``10**±(scale_range/2)`` — condition number ~10**scale_range.  In fp64
+    the pipelined recurrences of p-BiCGSafe drift and stagnate above the
+    1e-8 tolerance on this family, while ssBiCGSafe2 converges; residual
+    replacement recovers convergence (paper Fig. 5.2).
+    """
+    rng = np.random.default_rng(seed)
+    scales = 10.0 ** rng.uniform(-scale_range / 2, scale_range / 2, size=n)
+    a = np.zeros((n, n), dtype=dtype)
+    idx = np.arange(n)
+    a[idx, idx] = 2.5
+    a[idx[:-1], idx[:-1] + 1] = -1.0 + 0.3 * rng.standard_normal(n - 1)
+    a[idx[1:], idx[1:] - 1] = -1.2 + 0.3 * rng.standard_normal(n - 1)
+    # sparse long-range couplings
+    nnz_extra = 4 * n
+    ri = rng.integers(0, n, nnz_extra)
+    ci = rng.integers(0, n, nnz_extra)
+    a[ri, ci] += 0.2 * rng.standard_normal(nnz_extra)
+    a = a * scales[:, None]
+    return _with_unit_solution(DenseOperator(jnp.asarray(a)))
+
+
+def spd_dense(n: int = 200, seed: int = 0, cond: float = 1e4,
+              dtype=np.float64):
+    """Small dense SPD matrix with prescribed condition number (tests)."""
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    eigs = np.logspace(0, np.log10(cond), n)
+    a = (q * eigs) @ q.T
+    return _with_unit_solution(DenseOperator(jnp.asarray(a.astype(dtype))))
+
+
+def nonsym_dense(n: int = 200, seed: int = 1, skew: float = 0.4,
+                 dtype=np.float64):
+    """Small dense non-symmetric, well-conditioned (tests)."""
+    rng = np.random.default_rng(seed)
+    s = rng.standard_normal((n, n)) / np.sqrt(n)
+    a = np.eye(n) * 2.0 + 0.5 * (s + s.T) + skew * (s - s.T)
+    return _with_unit_solution(DenseOperator(jnp.asarray(a.astype(dtype))))

@@ -1,0 +1,176 @@
+"""p-BiCGSafe — communication-hiding pipelined BiCGSafe (paper Alg. 3.1)
+and p-BiCGSafe-rr — with residual replacement (paper Alg. 4.1).
+
+The paper's core contribution.  Algebraically identical to ssBiCGSafe2 but
+with the matvec results replaced by recurrences on auxiliary vectors
+
+    q_i = A s_i + beta_i l_{i-1}              (== A o_i,   Eqn. 3.5)
+    w_i = zeta_i q_i + eta_i(g_i + beta_i w_{i-1})   (== A u_i, Eqn. 3.9)
+    l_i = q_i - A w_i                         (== A t_i,   Eqn. 3.7)
+    g_{i+1} = zeta_i A s_i + eta_i g_i - alpha_i A w_i  (== A y_{i+1}, 3.10)
+    s_{i+1} = s_i - alpha_i q_i - g_{i+1}     (== A r_{i+1}, Eqn. 3.2)
+
+so that the single fused inner-product reduction of the iteration consumes
+only ``s_i, y_i, r_i, t_{i-1}`` — none of which depend on this iteration's
+matvec ``A s_i``.  The reduction and the matvec therefore have **no
+dependency edge** and overlap: MPI_Iallreduce+compute in the paper, the XLA
+latency-hiding scheduler / dependency-free psum here (DESIGN.md §3;
+structural proof in benchmarks/bench_overlap.py).
+
+p-BiCGSafe-rr resets ``r, q, w, l, g, s`` to their true values every
+``rr_epoch`` iterations while ``i < rr_maxiter`` (paper §4) to arrest the
+round-off drift of the recurred quantities.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ._common import (bicgsafe_coefficients, init_guess, local_dots,
+                      tree_select)
+from .types import (DotReduce, SolveResult, SolverConfig, history_init,
+                    history_update, identity_reduce)
+
+
+def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
+                     residual_replacement: bool):
+    eps = config.breakdown_threshold(b.dtype)
+    x = init_guess(b, x0)
+    r0 = b - matvec(x) if x0 is not None else b          # MV (init)
+    rs = r0 if r0_star is None else r0_star.astype(b.dtype)
+    s0 = matvec(r0)                                      # MV (init): s_0 = A r_0
+
+    norm_r0 = jnp.sqrt(dot_reduce(local_dots([(r0, r0)]))[0])
+    z0 = jnp.zeros_like(b)
+    hist = history_init(config, norm_r0.dtype)
+
+    one = jnp.ones((), b.dtype)
+    zero = jnp.zeros((), b.dtype)
+    state = dict(
+        x=x, r=r0, s=s0, p=z0, u=z0, t=z0, y=z0, z=z0, w=z0, l=z0, g=z0,
+        alpha=zero, zeta=one, f=one,
+        i=jnp.zeros((), jnp.int32),
+        relres=jnp.ones((), norm_r0.dtype),
+        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        hist=hist)
+
+    def cond(st):
+        return (~st["converged"]) & (~st["breakdown"]) & (st["i"] < config.maxiter)
+
+    def body(st):
+        r, s, y, t_prev = st["r"], st["s"], st["y"], st["t"]
+
+        # MV #1 (A s_i) and the fused reduction are mutually independent:
+        # the dots read only {s, y, r, t_prev, rs}.  This is the paper's
+        # communication hiding — in the lowered HLO there is no path from
+        # the all-reduce to the matvec.
+        As = matvec(s)
+        dots = dot_reduce(local_dots([
+            (s, s), (y, y), (s, y), (s, r), (y, r),
+            (rs, r), (rs, s), (rs, t_prev), (r, r)]))
+
+        beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
+            dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)
+        relres = jnp.sqrt(jnp.abs(rr)) / norm_r0
+        done = relres <= config.tol
+
+        # --- vector updates (identical algebra to Alg. 2.3 lines 23-30) ---
+        p = r + beta * (st["p"] - st["u"])
+        o = s + beta * t_prev
+        u = zeta * o + eta * (y + beta * st["u"])
+
+        if residual_replacement:
+            # Alg. 4.1 lines 26-33: on replacement steps q, w come from
+            # true matvecs instead of the recurrences.
+            do_rr = ((st["i"] % config.rr_epoch) == 0) & (st["i"] > 0) \
+                & (st["i"] < config.rr_maxiter)
+            q, w = jax.lax.cond(
+                do_rr,
+                lambda: (matvec(o), matvec(u)),
+                lambda: (As + beta * st["l"],
+                         zeta * (As + beta * st["l"])
+                         + eta * (st["g"] + beta * st["w"])))
+        else:
+            q = As + beta * st["l"]                       # == A o_i (3.5)
+            w = zeta * q + eta * (st["g"] + beta * st["w"])  # == A u_i (3.9)
+
+        t = o - w
+        z = zeta * r + eta * st["z"] - alpha * u
+        y_next = zeta * s + eta * y - alpha * w
+        x_next = st["x"] + alpha * p + z
+
+        if residual_replacement:
+            do_rr = ((st["i"] % config.rr_epoch) == 0) & (st["i"] > 0) \
+                & (st["i"] < config.rr_maxiter)
+
+            def rr_branch():
+                # Alg. 4.1 lines 38-45: reset recurred vectors to truth.
+                r_n = b - matvec(x_next)
+                l_n = matvec(t)
+                g_n = matvec(y_next)
+                s_n = matvec(r_n)
+                return r_n, l_n, g_n, s_n
+
+            def pipe_branch():
+                r_n = r - alpha * o - y_next
+                Aw = matvec(w)                            # MV #2 (A w_i)
+                l_n = q - Aw                              # == A t_i (3.7)
+                g_n = zeta * As + eta * st["g"] - alpha * Aw   # (3.10)
+                s_n = s - alpha * q - g_n                 # == A r_{i+1} (3.2)
+                return r_n, l_n, g_n, s_n
+
+            r_next, l, g_next, s_next = jax.lax.cond(do_rr, rr_branch,
+                                                     pipe_branch)
+        else:
+            r_next = r - alpha * o - y_next
+            Aw = matvec(w)                                # MV #2 (A w_i)
+            l = q - Aw                                    # == A t_i (3.7)
+            g_next = zeta * As + eta * st["g"] - alpha * Aw    # (3.10)
+            s_next = s - alpha * q - g_next               # == A r_{i+1} (3.2)
+
+        hist_i = history_update(st["hist"], st["i"], relres, config)
+        new = dict(
+            x=x_next, r=r_next, s=s_next, p=p, u=u, t=t, y=y_next, z=z,
+            w=w, l=l, g=g_next,
+            alpha=alpha, zeta=zeta, f=f,
+            i=st["i"] + 1, relres=relres,
+            converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+            hist=hist_i)
+        stopped = dict(st)
+        stopped.update(relres=relres, converged=done, breakdown=bad & ~done,
+                       hist=hist_i)
+        return tree_select(done | bad, stopped, new)
+
+    st = jax.lax.while_loop(cond, body, state)
+    return SolveResult(st["x"], st["i"], st["relres"], st["converged"],
+                       st["breakdown"], st["hist"])
+
+
+def pbicgsafe_solve(matvec: Callable,
+                    b: jax.Array,
+                    x0: Optional[jax.Array] = None,
+                    *,
+                    config: SolverConfig = SolverConfig(),
+                    r0_star: Optional[jax.Array] = None,
+                    dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+    """Solve A x = b with p-BiCGSafe (paper Alg. 3.1)."""
+    return _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
+                            residual_replacement=False)
+
+
+def pbicgsafe_rr_solve(matvec: Callable,
+                       b: jax.Array,
+                       x0: Optional[jax.Array] = None,
+                       *,
+                       config: SolverConfig = SolverConfig(),
+                       r0_star: Optional[jax.Array] = None,
+                       dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+    """Solve A x = b with p-BiCGSafe-rr (paper Alg. 4.1).
+
+    ``config.rr_epoch`` is the paper's ``m`` (default 100, the paper's
+    default), ``config.rr_maxiter`` the cutoff ``M``.
+    """
+    return _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
+                            residual_replacement=True)

@@ -1,0 +1,90 @@
+"""ssBiCGSafe2 — single-synchronization BiCGSafe (paper Alg. 2.3, Fujino).
+
+The non-pipelined baseline: one global-reduction phase per iteration, but
+the inner products *depend* on the fresh matvec ``s_i = A r_i``, so the
+reduction cannot overlap with it.  Two matvecs per iteration
+(``A r_i``, ``A u_i``), 9 fused inner products, 10 vectors.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ._common import (bicgsafe_coefficients, init_guess, local_dots,
+                      tree_select)
+from .types import (DotReduce, SolveResult, SolverConfig, history_init,
+                    history_update, identity_reduce)
+
+
+def ssbicgsafe2_solve(matvec: Callable,
+                      b: jax.Array,
+                      x0: Optional[jax.Array] = None,
+                      *,
+                      config: SolverConfig = SolverConfig(),
+                      r0_star: Optional[jax.Array] = None,
+                      dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+    """Solve A x = b with ssBiCGSafe2 (Alg. 2.3)."""
+    eps = config.breakdown_threshold(b.dtype)
+    x = init_guess(b, x0)
+    r0 = b - matvec(x) if x0 is not None else b
+    rs = r0 if r0_star is None else r0_star.astype(b.dtype)
+
+    norm_r0_sq = dot_reduce(local_dots([(r0, r0)]))[0]
+    norm_r0 = jnp.sqrt(norm_r0_sq)
+    z0 = jnp.zeros_like(b)
+    hist = history_init(config, norm_r0.dtype)
+    hist = history_update(hist, 0, jnp.ones_like(norm_r0), config)
+
+    one = jnp.ones((), b.dtype)
+    zero = jnp.zeros((), b.dtype)
+    state = dict(
+        x=x, r=r0, p=z0, u=z0, t=z0, y=z0, z=z0,
+        alpha=zero, zeta=one, f=one,
+        i=jnp.zeros((), jnp.int32),
+        relres=jnp.ones((), norm_r0.dtype),
+        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        hist=hist)
+
+    def cond(st):
+        return (~st["converged"]) & (~st["breakdown"]) & (st["i"] < config.maxiter)
+
+    def body(st):
+        r, y, t_prev = st["r"], st["y"], st["t"]
+        s = matvec(r)                                   # MV #1: s_i = A r_i
+        # --- single fused reduction phase (depends on s -> no overlap) ---
+        dots = dot_reduce(local_dots([
+            (s, s), (y, y), (s, y), (s, r), (y, r),
+            (rs, r), (rs, s), (rs, t_prev), (r, r)]))
+        beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
+            dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)
+        relres = jnp.sqrt(jnp.abs(rr)) / norm_r0
+        done = relres <= config.tol
+
+        # --- vector updates (paper lines 23-30) ---
+        p = r + beta * (st["p"] - st["u"])
+        o = s + beta * t_prev
+        u = zeta * o + eta * (y + beta * st["u"])
+        w = matvec(u)                                   # MV #2: w_i = A u_i
+        t = o - w
+        z = zeta * r + eta * st["z"] - alpha * u
+        y_next = zeta * s + eta * y - alpha * w
+        x_next = st["x"] + alpha * p + z
+        r_next = r - alpha * o - y_next
+
+        hist_i = history_update(st["hist"], st["i"], relres, config)
+        new = dict(
+            x=x_next, r=r_next, p=p, u=u, t=t, y=y_next, z=z,
+            alpha=alpha, zeta=zeta, f=f,
+            i=st["i"] + 1, relres=relres,
+            converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+            hist=hist_i)
+        stopped = dict(st)
+        stopped.update(relres=relres, converged=done, breakdown=bad & ~done,
+                       hist=hist_i)
+        return tree_select(done | bad, stopped, new)
+
+    st = jax.lax.while_loop(cond, body, state)
+    return SolveResult(st["x"], st["i"], st["relres"], st["converged"],
+                       st["breakdown"], st["hist"])

@@ -1,0 +1,91 @@
+"""Common types for the Krylov solver core.
+
+Every solver in ``repro.core`` returns a :class:`SolveResult` and accepts a
+:class:`SolverConfig`.  All solvers are pure functions built on
+``jax.lax.while_loop`` so they jit, vmap and shard_map cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SolveResult(NamedTuple):
+    """Result of an iterative solve.
+
+    Attributes:
+      x: approximate solution vector.
+      iterations: number of iterations executed (int32 scalar).
+      relres: final relative residual norm ||r_i|| / ||r_0|| (recurred).
+      converged: bool scalar — relres <= tol within maxiter.
+      breakdown: bool scalar — a pivot/denominator underflowed (solver
+        stopped making progress for numerical reasons, not convergence).
+      residual_history: optional (maxiter+1,) array of relative residual
+        norms (filled with NaN past ``iterations``) when
+        ``SolverConfig.record_history`` is set; otherwise a (0,) array.
+    """
+
+    x: jax.Array
+    iterations: jax.Array
+    relres: jax.Array
+    converged: jax.Array
+    breakdown: jax.Array
+    residual_history: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Static configuration for a solve (hashable; closed over at trace time).
+
+    Attributes:
+      tol: relative residual tolerance (paper uses 1e-8).
+      maxiter: iteration cap (paper uses 1e4).
+      record_history: record per-iteration relative residuals (costs a
+        (maxiter+1,) buffer; used by the convergence benchmarks).
+      rr_epoch: residual-replacement epoch ``m`` (p-BiCGSafe-rr only).
+      rr_maxiter: residual-replacement cutoff ``M`` (p-BiCGSafe-rr only).
+      breakdown_eps: |denominator| threshold treated as breakdown.
+    """
+
+    tol: float = 1e-8
+    maxiter: int = 10_000
+    record_history: bool = False
+    rr_epoch: int = 100
+    rr_maxiter: int = 10_000
+    breakdown_eps: float = 0.0  # 0 → use dtype-scaled default
+
+    def breakdown_threshold(self, dtype) -> float:
+        if self.breakdown_eps:
+            return self.breakdown_eps
+        return float(jnp.finfo(dtype).tiny) * 1e4
+
+
+# A matvec is any callable Array -> Array preserving shape/dtype.
+MatVec = Callable[[jax.Array], jax.Array]
+
+# A dot-combiner: given a list of local partial sums, produce global sums.
+# In the single-process solvers this is the identity; the distributed
+# driver replaces it with a single fused psum (one global reduction --
+# the paper's "single synchronization phase").
+DotReduce = Callable[[jax.Array], jax.Array]
+
+
+def identity_reduce(partials: jax.Array) -> jax.Array:
+    return partials
+
+
+def history_init(cfg: SolverConfig, n_dtype) -> jax.Array:
+    if cfg.record_history:
+        return jnp.full((cfg.maxiter + 1,), jnp.nan, dtype=n_dtype)
+    return jnp.zeros((0,), dtype=n_dtype)
+
+
+def history_update(hist: jax.Array, i: jax.Array, relres: jax.Array,
+                   cfg: SolverConfig) -> jax.Array:
+    if cfg.record_history:
+        return hist.at[i].set(relres.astype(hist.dtype))
+    return hist

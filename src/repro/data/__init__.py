@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, byte_tokenize, make_dataset,
+                       synthetic_token_stream)
+
+__all__ = ["DataConfig", "byte_tokenize", "make_dataset",
+           "synthetic_token_stream"]

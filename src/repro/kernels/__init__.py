@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+<name>.py      pl.pallas_call + BlockSpec VMEM tiling
+ops.py         jit'd backend-dispatching wrappers (public API)
+ref.py         pure-jnp oracles (tests assert allclose against these)
+
+Kernels:
+  fused_dots       the paper's single fused inner-product phase (9 dots)
+  spmv_ell         banded ELLPACK SpMV (TPU-native layout of the paper's
+                   CSR SpMV)
+  fused_axpy       p-BiCGSafe's 10 vector updates in one HBM pass
+  flash_attention  causal GQA flash attention (model-stack hot spot)
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

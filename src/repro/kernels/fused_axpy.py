@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: p-BiCGSafe's fused vector-update phase.
+
+Alg. 3.1 lines 23-32 are 10 vector updates (26 alpha*x + 22 x+y flops per
+element, paper Table 3.1).  Issued as separate AXPYs they read/write each
+vector several times; this kernel performs the whole phase in a single HBM
+pass: 12 tile reads + 10 tile writes per block, all arithmetic in VMEM.
+That matters because the phase is pure memory-bound (arith intensity
+~0.6 flop/byte) — fusing it is worth ~2.5x on the solver's vector-update
+time at the 819 GB/s HBM roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+IN_ORDER = ("r", "p", "u", "t", "y", "z", "s", "l", "g", "w", "x", "As")
+OUT_ORDER = ("p", "o", "u", "q", "w", "t", "z", "y", "x", "r")
+
+
+def _kernel(scal_ref, r_ref, p_ref, u_ref, t_ref, y_ref, z_ref, s_ref,
+            l_ref, g_ref, w_ref, x_ref, As_ref,
+            p_o, o_o, u_o, q_o, w_o, t_o, z_o, y_o, x_o, r_o):
+    f32 = jnp.promote_types(r_ref.dtype, jnp.float32)
+    al = scal_ref[0, 0].astype(f32)
+    be = scal_ref[0, 1].astype(f32)
+    ze = scal_ref[0, 2].astype(f32)
+    et = scal_ref[0, 3].astype(f32)
+    r = r_ref[...].astype(f32)
+    p = p_ref[...].astype(f32)
+    u = u_ref[...].astype(f32)
+    t = t_ref[...].astype(f32)
+    y = y_ref[...].astype(f32)
+    z = z_ref[...].astype(f32)
+    s = s_ref[...].astype(f32)
+    l = l_ref[...].astype(f32)
+    g = g_ref[...].astype(f32)
+    w = w_ref[...].astype(f32)
+    x = x_ref[...].astype(f32)
+    As = As_ref[...].astype(f32)
+
+    p2 = r + be * (p - u)
+    o = s + be * t
+    u2 = ze * o + et * (y + be * u)
+    q = As + be * l
+    w2 = ze * q + et * (g + be * w)
+    t2 = o - w2
+    z2 = ze * r + et * z - al * u2
+    y2 = ze * s + et * y - al * w2
+    x2 = x + al * p2 + z2
+    r2 = r - al * o - y2
+
+    for ref, val in zip((p_o, o_o, u_o, q_o, w_o, t_o, z_o, y_o, x_o, r_o),
+                        (p2, o, u2, q, w2, t2, z2, y2, x2, r2)):
+        ref[...] = val.astype(ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_axpy_pallas(vecs: dict, scalars, *, block_rows: int = 256,
+                      interpret: bool = False) -> dict:
+    """vecs: dict of 12 equal-length vectors (IN_ORDER); scalars: (4,).
+    Returns dict of the 10 updated vectors (OUT_ORDER)."""
+    n = vecs["r"].shape[0]
+    dtype = vecs["r"].dtype
+    lane_rows = -(-n // LANES)
+    rows = -(-lane_rows // block_rows) * block_rows
+    padded = rows * LANES
+
+    def prep(v):
+        return jnp.pad(v, (0, padded - n)).reshape(rows, LANES)
+
+    args = [prep(vecs[k]) for k in IN_ORDER]
+    sdt = jnp.promote_types(dtype, jnp.float32)
+    scal = jnp.zeros((1, LANES), sdt).at[0, :4].set(
+        jnp.asarray(scalars, sdt))
+
+    vec_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        _kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((1, LANES), lambda i: (0, 0))]
+        + [vec_spec] * 12,
+        out_specs=[vec_spec] * 10,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), dtype)] * 10,
+        interpret=interpret,
+    )(scal, *args)
+    return {k: o.reshape(-1)[:n] for k, o in zip(OUT_ORDER, outs)}

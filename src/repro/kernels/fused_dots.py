@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: the paper's single fused inner-product phase.
+
+Computes the 9 inner products of p-BiCGSafe/ssBiCGSafe2 over the vectors
+(s, y, r, t_{i-1}, r0*) in ONE pass: each vector tile is read from HBM into
+VMEM exactly once and contributes to all of its dot products, vs. 9
+separate dot kernels reading 18 operands.  The local partials this kernel
+emits are exactly what the solver's single ``psum`` reduces (Fig. 1.1 of
+the paper: local partial sums -> one global reduction).
+
+Layout: vectors are reshaped to (rows, 128) lanes; the grid walks row
+blocks sequentially and accumulates into the (1, 16)-padded output
+(first 9 entries meaningful).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+OUT_PAD = 16  # pad 9 -> 16 for clean layout
+
+
+def _kernel(s_ref, y_ref, r_ref, t_ref, rs_ref, out_ref):
+    i = pl.program_id(0)
+    acc = out_ref.dtype
+    s = s_ref[...].astype(acc)
+    y = y_ref[...].astype(acc)
+    r = r_ref[...].astype(acc)
+    t = t_ref[...].astype(acc)
+    rs = rs_ref[...].astype(acc)
+    partial = jnp.stack([
+        jnp.sum(s * s), jnp.sum(y * y), jnp.sum(s * y), jnp.sum(s * r),
+        jnp.sum(y * r), jnp.sum(rs * r), jnp.sum(rs * s), jnp.sum(rs * t),
+        jnp.sum(r * r)])
+    partial = jnp.pad(partial, (0, OUT_PAD - 9)).reshape(1, OUT_PAD)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_dots_pallas(s, y, r, t, rs, *, block_rows: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """Returns the 9 fused dots (fp32).  Inputs: equal-length 1-D vectors."""
+    n = s.shape[0]
+    lane_rows = -(-n // LANES)              # ceil
+    rows = -(-lane_rows // block_rows) * block_rows
+    padded = rows * LANES
+
+    def prep(v):
+        return jnp.pad(v, (0, padded - n)).reshape(rows, LANES)
+
+    args = [prep(v) for v in (s, y, r, t, rs)]
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))] * 5,
+        out_specs=pl.BlockSpec((1, OUT_PAD), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (1, OUT_PAD), jnp.promote_types(s.dtype, jnp.float32)),
+        interpret=interpret,
+    )(*args)
+    return out[0, :9]

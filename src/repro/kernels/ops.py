@@ -1,0 +1,71 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Each op dispatches to the hand-tiled Pallas kernel on TPU and to
+``interpret=True`` (Python emulation of the same kernel body) elsewhere, so
+the call sites are backend-agnostic.  ``repro.kernels.ref`` holds the
+pure-jnp oracles the kernels are validated against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .fused_axpy import fused_axpy_pallas
+from .fused_dots import fused_dots_pallas
+from .spmv_ell import spmv_ell_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_dots(s, y, r, t, rs) -> jax.Array:
+    """9 fused inner products (local partials; reduce with one psum)."""
+    return fused_dots_pallas(s, y, r, t, rs, interpret=_interpret())
+
+
+def spmv_ell(op, x) -> jax.Array:
+    """Banded ELL SpMV via the Pallas kernel; falls back to the jnp path
+    when the band assumption does not hold."""
+    from repro.core.linear_operator import ELLOperator
+    assert isinstance(op, ELLOperator)
+    if not ell_is_banded(op):
+        return ref.spmv_ell(op.values, op.cols, x)
+    return spmv_ell_pallas(op.values, op.cols, x, interpret=_interpret())
+
+
+@functools.lru_cache(maxsize=64)
+def _banded_cache(key):  # pragma: no cover - trivial
+    return None
+
+
+def ell_is_banded(op, block_rows: int = 512) -> bool:
+    rows = np.arange(op.n)[:, None]
+    cols = np.asarray(op.cols)
+    vals = np.asarray(op.values)
+    band = np.abs(np.where(vals != 0, cols - rows, 0)).max()
+    return bool(band < block_rows)
+
+
+def fused_axpy(vecs: Dict[str, jax.Array], scalars) -> Dict[str, jax.Array]:
+    """p-BiCGSafe fused vector-update phase (Alg. 3.1 lines 23-32)."""
+    return fused_axpy_pallas(vecs, scalars, interpret=_interpret())
+
+
+def flash_attention(qg, k, v, *, scale: float, causal: bool = True
+                    ) -> jax.Array:
+    """Causal flash attention.  qg: (B,S,K,G,hd), k/v: (B,S,K,hd) (the
+    model stack's layout) -> (B,S,K*G*hd)."""
+    B, S, K, G, hd = qg.shape
+    q = jnp.moveaxis(qg.reshape(B, S, K * G, hd), 1, 2)   # (B,H,S,hd)
+    kk = jnp.moveaxis(k, 1, 2)                            # (B,K,S,hd)
+    vv = jnp.moveaxis(v, 1, 2)
+    o = flash_attention_pallas(q, kk, vv, scale=scale, causal=causal,
+                               interpret=_interpret())
+    return jnp.moveaxis(o, 2, 1).reshape(B, S, K * G * hd)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_dots(s, y, r, t, rs) -> jax.Array:
+    """The 9 inner products of ssBiCGSafe2/p-BiCGSafe's single reduction
+    phase: [a,b,c,d,e,f,g,h,rr] (paper Alg. 3.1 lines 7-8)."""
+    f32 = jnp.promote_types(s.dtype, jnp.float32)
+    return jnp.stack([
+        jnp.sum(s * s, dtype=f32), jnp.sum(y * y, dtype=f32),
+        jnp.sum(s * y, dtype=f32), jnp.sum(s * r, dtype=f32),
+        jnp.sum(y * r, dtype=f32), jnp.sum(rs * r, dtype=f32),
+        jnp.sum(rs * s, dtype=f32), jnp.sum(rs * t, dtype=f32),
+        jnp.sum(r * r, dtype=f32)])
+
+
+def spmv_ell(values, cols, x) -> jax.Array:
+    """ELLPACK SpMV: y[i] = sum_j values[i,j] * x[cols[i,j]]."""
+    return jnp.sum(values * x[cols], axis=1)
+
+
+def fused_axpy(vecs, scalars):
+    """The fused vector-update phase of p-BiCGSafe (Alg. 3.1 lines 23-32).
+
+    vecs: dict with r,p,u,t,y,z,s,l,g,w,x,As   scalars: (alpha,beta,zeta,eta)
+    Returns dict with p,o,u,q,w,t,z,y,x,r (primed values).
+    """
+    al, be, ze, et = scalars
+    r, p, u, t, y, z = (vecs[k] for k in "rputyz")
+    s, l, g, w, x, As = (vecs[k] for k in ("s", "l", "g", "w", "x", "As"))
+    p2 = r + be * (p - u)
+    o = s + be * t
+    u2 = ze * o + et * (y + be * u)
+    q = As + be * l
+    w2 = ze * q + et * (g + be * w)
+    t2 = o - w2
+    z2 = ze * r + et * z - al * u2
+    y2 = ze * s + et * y - al * w2
+    x2 = x + al * p2 + z2
+    r2 = r - al * o - y2
+    return {"p": p2, "o": o, "u": u2, "q": q, "w": w2, "t": t2,
+            "z": z2, "y": y2, "x": x2, "r": r2}
+
+
+def flash_attention(q, k, v, scale: float, causal: bool = True) -> jax.Array:
+    """q: (B,H,S,hd)  k/v: (B,K,S,hd), GQA with G=H//K."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, S, hd)
+    logits = jnp.einsum("bkgsh,bkth->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        idx = jnp.arange(S)
+        mask = idx[:, None] >= idx[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,bkth->bkgsh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)

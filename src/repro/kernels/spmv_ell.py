@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: banded ELLPACK SpMV.
+
+TPU adaptation of the paper's PETSc CSR SpMV (DESIGN.md §3): ELL stores a
+fixed ``k`` nonzeros per row as dense (n, k) tiles — a regular layout that
+maps onto VMEM blocks, unlike CSR's ragged rows.  The kernel assumes the
+matrix is *banded* (|col - row| < block_rows, true for the stencil/banded
+generators after ordering): for row block i only the x-blocks i-1, i, i+1
+are needed, so x is streamed through VMEM three blocks at a time (this is
+also exactly the halo pattern of the distributed SpMV — one kernel serves
+both).
+
+Per row r: y[r] = sum_j values[r, j] * x[cols[r, j]].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(values_ref, local_ref, xprev_ref, xself_ref, xnext_ref, y_ref):
+    # accumulate in f64 for f64 inputs (solver fidelity), else f32
+    acc = jnp.promote_types(y_ref.dtype, jnp.float32)
+    vals = values_ref[...].astype(acc)                    # (bn, k)
+    local = local_ref[...]                                # (bn, k) in [0,3bn)
+    x_cat = jnp.concatenate([xprev_ref[...], xself_ref[...],
+                             xnext_ref[...]]).astype(acc)  # (3bn,)
+    gathered = jnp.take(x_cat, local, axis=0)             # (bn, k)
+    y_ref[...] = jnp.sum(vals * gathered, axis=1).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell_pallas(values, cols, x, *, block_rows: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """Banded ELL SpMV.  values/cols: (n, k); x: (n,).
+
+    Requires max|cols[r,:] - r| < block_rows (checked by ops.spmv_ell).
+    """
+    n, k = values.shape
+    bn = block_rows
+    pad = (-n) % bn
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        # padded rows: point at column 0 with value 0
+        cols = jnp.pad(cols, ((0, pad), (0, 0)))
+        x = jnp.pad(x, (0, pad))
+    np_ = n + pad
+    nblk = np_ // bn
+
+    # local index of each referenced column within [x_prev | x_self | x_next]
+    # (block 0's duplicated x_prev and the last block's duplicated x_next
+    # are never addressed: the band bound keeps local in range)
+    row_block = jnp.arange(np_, dtype=jnp.int32)[:, None] // bn
+    base = (row_block - 1) * bn
+    local = jnp.clip((cols - base).astype(jnp.int32), 0, 3 * bn - 1)
+
+    y = pl.pallas_call(
+        _kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),       # values
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),       # local idx
+            pl.BlockSpec((bn,), lambda i: (jnp.maximum(i - 1, 0),)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (jnp.minimum(i + 1, nblk - 1),)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), x.dtype),
+        interpret=interpret,
+    )(values, local, x, x, x)
+    return y[:n]

@@ -1,0 +1,82 @@
+"""Per-shape collective histogram for one dry-run cell — the §Perf
+profiling tool (we reason from the lowered IR, not wall-clock traces).
+
+  PYTHONPATH=src python -m repro.launch.collective_histogram \
+      --arch qwen1.5-110b --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import re                # noqa: E402
+from collections import Counter  # noqa: E402
+
+import numpy as np       # noqa: E402
+
+from repro.launch.dryrun import build_cell  # noqa: E402
+from repro.launch.hlo_analysis import (_DTYPE_BYTES, _SHAPE_RE,  # noqa: E402
+                                       split_computations)
+
+
+def histogram(text: str, multiplier_bodies=None, mult: float = 1.0):
+    comps = split_computations(text)
+    bodies = set()
+    for line in text.splitlines():
+        m = re.search(r"\bwhile\(.*?body=%?([\w.\-]+)", line)
+        if m:
+            bodies.add(m.group(1))
+    hist = Counter()
+    for cname, body in comps.items():
+        k = mult if cname in bodies else 1.0
+        for line in body.splitlines():
+            m = re.search(r"=\s*((?:\([^)]*\))|(?:[^\s]+))\s+([\w\-]+)\(",
+                          line)
+            if not m:
+                continue
+            typestr, op = m.groups()
+            base = op.split(".")[0]
+            if base.rstrip("-start") not in (
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute") and base not in (
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"):
+                continue
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(typestr):
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES.get(dt, 4)
+            hist[(base, typestr[:60])] += k * nbytes
+    return hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. remat=dots)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"True": True, "False": False}.get(
+            v, int(v) if v.isdigit() else v)
+    mesh, lm, cfg, fn, fargs = build_cell(args.arch, args.shape,
+                                          args.multi_pod, overrides)
+    text = fn.lower(*fargs).compile().as_text()
+    hist = histogram(text, mult=max(cfg.n_layers, 1))
+    total = sum(hist.values())
+    print(f"{args.arch} {args.shape}: total collective result bytes "
+          f"(trip-corrected) {total:.3e}")
+    for (op, shape), b in hist.most_common(args.top):
+        print(f"  {b:12.3e}  {b/total*100:5.1f}%  {op:20s} {shape}")
+
+
+if __name__ == "__main__":
+    main()

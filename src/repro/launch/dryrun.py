@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON artifact with:
+  memory_analysis   (bytes per device: args/outputs/temps/peak)
+  cost_analysis     (HLO flops / bytes accessed)
+  collective_stats  (counts + wire-byte estimates per collective kind)
+used by EXPERIMENTS.md §Dry-run and the roofline (§Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (SHAPES, get_config, input_specs,  # noqa: E402
+                           skip_reason)
+from repro.configs.base import ARCH_IDS  # noqa: E402
+from repro.launch.hlo_analysis import collective_stats  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import (cache_logical_axes, decode_step, init_cache,  # noqa: E402
+                          init_params, loss_fn, prefill_step)
+from repro.optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
+from repro.optim.eightbit import Q8  # noqa: E402
+from repro.parallel import LogicalMesh, use_mesh  # noqa: E402
+from repro.parallel.param_rules import tree_param_specs  # noqa: E402
+
+# 8-bit optimizer states for the very large configs (DESIGN.md §5)
+_I8_STATE_ARCHS = {"deepseek-v3-671b", "qwen1.5-110b", "qwen2-vl-72b",
+                   "llama4-scout-17b-a16e"}
+
+
+def _opt_cfg(arch: str) -> AdamWConfig:
+    return AdamWConfig(state_dtype="i8" if arch in _I8_STATE_ARCHS else "f32")
+
+
+def _div_spec(lm: LogicalMesh, shape, *logical):
+    """Logical spec with divisibility fallback per dim."""
+    parts = []
+    for dim, l in zip(shape, logical):
+        ax = lm.axes_for(l)
+        if ax is None:
+            parts.append(None)
+            continue
+        n = lm.size(l)
+        parts.append(ax if dim % max(n, 1) == 0 and dim >= n else None)
+    return P(*parts)
+
+
+def _opt_state_specs(param_specs, lm: LogicalMesh, i8: bool):
+    def like(spec):
+        if i8:
+            # scales shard like the codes' leading dims (blocks on last dim)
+            lead = tuple(spec)[:-1] if len(spec) else ()
+            return Q8(codes=spec, scales=P(*lead, None))
+        return spec
+
+    moments = jax.tree_util.tree_map(
+        like, param_specs, is_leaf=lambda x: isinstance(x, P))
+    return {"m": moments, "v": moments, "count": P()}
+
+
+def _sharding_tree(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Returns (jitted_fn, example_args_SDS, static info)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lm = LogicalMesh(mesh)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    sp = SHAPES[shape]
+    specs = input_specs(cfg, shape, arch)
+
+    params_sds = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = tree_param_specs(params_sds, lm)
+    psh = _sharding_tree(pspecs, mesh)
+
+    if sp.kind == "train":
+        ocfg = _opt_cfg(arch)
+        opt_sds = jax.eval_shape(lambda: adamw_init(params_sds_concrete(
+            params_sds), ocfg))
+        ospecs = _opt_state_specs(pspecs, lm, ocfg.state_dtype == "i8")
+        osh = _sharding_tree(ospecs, mesh)
+        batch = specs["batch"]
+        bsh = {k: NamedSharding(mesh, _div_spec(lm, v.shape, "batch",
+                                                *(None,) * (len(v.shape) - 1)))
+               for k, v in batch.items()}
+
+        def train_step(params, opt_state, batch):
+            with use_mesh(lm):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, cfg, batch)
+                params, opt_state = adamw_update(params, grads, opt_state,
+                                                 ocfg)
+            return params, opt_state, metrics
+
+        fn = jax.jit(train_step,
+                     in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None),
+                     donate_argnums=(0, 1))   # params/opt update in place
+        args = (params_sds, opt_sds, batch)
+        return mesh, lm, cfg, fn, args
+
+    if sp.kind == "prefill":
+        batch = specs["batch"]
+        bsh = {k: NamedSharding(mesh, _div_spec(lm, v.shape, "batch",
+                                                *(None,) * (len(v.shape) - 1)))
+               for k, v in batch.items()}
+
+        def pre(params, batch):
+            with use_mesh(lm):
+                return prefill_step(params, cfg, batch)
+
+        fn = jax.jit(pre, in_shardings=(psh, bsh))
+        return mesh, lm, cfg, fn, (params_sds, batch)
+
+    # decode
+    cache_sds = specs["cache"]
+    cax = cache_logical_axes(cfg)
+    cspecs = {k: _div_spec(lm, cache_sds[k].shape, *cax[k])
+              for k in cache_sds}
+    csh = _sharding_tree(cspecs, mesh)
+    tsh = NamedSharding(mesh, _div_spec(lm, specs["tokens"].shape, "batch",
+                                        None))
+
+    def dec(params, cache, tokens, cache_len):
+        with use_mesh(lm):
+            return decode_step(params, cfg, cache, tokens, cache_len)
+
+    fn = jax.jit(dec, in_shardings=(psh, csh, tsh, NamedSharding(mesh, P())),
+                 out_shardings=(None, csh),
+                 donate_argnums=(1,))         # cache updates in place
+    args = (params_sds, cache_sds, specs["tokens"], specs["cache_len"])
+    return mesh, lm, cfg, fn, args
+
+
+def params_sds_concrete(sds_tree):
+    """eval_shape-compatible stand-in tree (SDS is fine for eval_shape)."""
+    return sds_tree
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir: Path,
+             force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out = outdir / mesh_name / f"{arch}__{shape}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    out.parent.mkdir(parents=True, exist_ok=True)
+
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skip", "reason": reason}
+        out.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    try:
+        mesh, lm, cfg, fn, args = build_cell(arch, shape, multi_pod)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "peak_memory_in_bytes", "alias_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_rec[f] = int(v)
+        cost = compiled.cost_analysis()
+        cost_rec = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float))} if cost else {}
+        text = compiled.as_text()
+        # layer-scan trip-count correction (HLO lists while bodies once)
+        cs = collective_stats(text, n_devices=mesh.size,
+                              while_body_multiplier=max(
+                                  cfg.n_layers, cfg.n_encoder_layers, 1))
+        cs_raw = collective_stats(text, n_devices=mesh.size)
+        # analytic global flop/byte count from the jaxpr (scan-aware;
+        # compiled cost_analysis undercounts while bodies + oneDNN calls)
+        from repro.launch.flops import count_fn
+        analytic = count_fn(fn, *args)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": mem_rec,
+            "flops": cost_rec.get("flops"),
+            "bytes_accessed": cost_rec.get("bytes accessed"),
+            "analytic_global_flops": analytic["flops"],
+            "analytic_global_bytes": analytic["bytes"],
+            "analytic_global_dot_bytes": analytic["dot_bytes"],
+            "cost": cost_rec,
+            "collectives": {
+                "counts": cs.counts,
+                "result_bytes": cs.result_bytes,
+                "wire_bytes": cs.wire_bytes,
+                "wire_by_dtype": cs.wire_by_dtype,
+                "total_wire_bytes": cs.total_wire_bytes,
+                # XLA:CPU legalizes bf16->f32; TPU estimate halves f32 wire
+                "tpu_wire_bytes": cs.tpu_wire_bytes(bf16_program=True),
+                "total_wire_bytes_uncorrected": cs_raw.total_wire_bytes,
+            },
+        })
+        print(f"[ok] {mesh_name} {arch} {shape}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops={cost_rec.get('flops', 0):.3e} "
+              f"wire={cs.total_wire_bytes:.3e}B")
+    except Exception as e:  # noqa: BLE001 - record and continue
+        rec.update({"status": "error", "error": str(e)[-4000:],
+                    "traceback": traceback.format_exc()[-8000:]})
+        print(f"[ERR] {mesh_name} {arch} {shape}: {e}")
+    out.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_err = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mp, outdir, force=args.force)
+                n_err += rec.get("status") == "error"
+    print(f"done, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Training launcher.
+
+Single-host CPU runs train the reduced configs end-to-end; with
+``--production-mesh`` the full config is lowered/compiled against the
+16x16 (or 2x16x16) mesh instead (dry-run path — this container has one
+real device).
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
+      --steps 200 --batch-size 8 --seq-len 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--full-config", dest="smoke", action="store_false")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="lower against the 512-device production mesh "
+                         "(dry-run; no real step execution)")
+    args = ap.parse_args()
+
+    if args.production_mesh:
+        from repro.launch import dryrun
+        rec = dryrun.run_cell(args.arch, "train_4k", False,
+                              outdir=__import__("pathlib").Path(
+                                  "experiments/dryrun"), force=True)
+        print(json.dumps({k: rec[k] for k in ("status", "compile_s")
+                          if k in rec}, indent=2))
+        return
+
+    from repro.configs import get_config, smoke_config
+    from repro.data import DataConfig
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, train
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dcfg = DataConfig(batch_size=args.batch_size, seq_len=args.seq_len,
+                      vocab_size=cfg.vocab_size)
+    tcfg = TrainConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(1, args.steps // 20),
+                        decay_steps=args.steps))
+    out = train(cfg, dcfg, tcfg)
+    first = out["history"][0]["loss"] if out["history"] else float("nan")
+    print(f"arch={cfg.name} steps={args.steps} "
+          f"loss {first:.4f} -> {out['final_loss']:.4f} "
+          f"rejected={out['rejected_steps']} "
+          f"stragglers={out['straggler_stats']}")
+
+
+if __name__ == "__main__":
+    main()

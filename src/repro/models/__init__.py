@@ -1,0 +1,6 @@
+from .common import ModelConfig
+from .transformer import (cache_logical_axes, decode_step, forward,
+                          init_cache, init_params, loss_fn, prefill_step)
+
+__all__ = ["ModelConfig", "cache_logical_axes", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn", "prefill_step"]

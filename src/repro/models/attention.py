@@ -1,0 +1,213 @@
+"""GQA/MHA attention: train (chunked-causal), prefill, and cached decode.
+
+Covers the assigned archs' attention variants: GQA with arbitrary kv-head
+count, optional QKV bias (qwen2.5/qwen1.5), qk_norm (qwen3), sliding window
+(zamba2 long-context), M-RoPE (qwen2-vl), cross-attention (whisper).
+
+Training/prefill uses a q-block-chunked attention (``lax.scan`` over query
+blocks) so the (S × S) score matrix never materializes — O(S·blk) live
+memory, the TPU-idiomatic analogue of FlashAttention at the XLA level.  The
+Pallas flash kernel in ``repro.kernels.flash_attention`` is the
+hand-tiled TPU version of the same computation (``cfg.use_flash_kernel``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ModelConfig, apply_mrope, apply_rope, dense_init,
+                     rms_norm)
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def init_attention_params(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    hd = cfg.hd
+    H, K, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, K * hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, K * hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], (H * hd, d), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((K * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((K * hd,), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.param_dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, x_kv: jax.Array, cfg: ModelConfig,
+                 positions, kv_positions) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, d = x.shape
+    T = x_kv.shape[1]
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"].astype(x.dtype)
+    k = x_kv @ p["wk"].astype(x.dtype)
+    v = x_kv @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, T, K, hd)
+    v = v.reshape(B, T, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if positions is not None:  # rope (None for cross-attention / whisper)
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, kv_positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_block(q, k, v, mask, scale):
+    """q: (B,Sq,H,hd)  k/v: (B,T,H,hd) (KV pre-repeated to H heads).
+
+    Flat-head einsums keep the head dim cleanly sharded on 'model'; a
+    (K, G) factorization fragments the axis and makes GSPMD all-gather the
+    logits (EXPERIMENTS.md §Perf, hillclimb B iteration 2).
+    """
+    from repro.parallel import logical_constraint as _shard
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _shard(logits, "batch", "heads", None, None)
+    if mask is not None:
+        logits = logits + jnp.where(mask, 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return _shard(out, "batch", None, "heads", None)
+
+
+def multihead_attention(p: Params, x: jax.Array, positions: jax.Array,
+                        cfg: ModelConfig, *,
+                        causal: bool = True,
+                        x_kv: Optional[jax.Array] = None,
+                        kv_positions: Optional[jax.Array] = None,
+                        q_block: int = 1024,
+                        return_kv: bool = False):
+    """Full attention over a sequence (train / prefill / encoder / cross).
+
+    Chunked over query blocks when S > q_block to bound live memory.
+    """
+    cross = x_kv is not None
+    x_kv = x if x_kv is None else x_kv
+    kv_positions = positions if kv_positions is None else kv_positions
+    B, S, d = x.shape
+    T = x_kv.shape[1]
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    q, k, v = _project_qkv(p, x, x_kv, cfg,
+                           None if cross else positions,
+                           None if cross else kv_positions)
+    k_kv, v_kv = k, v          # pre-repeat KV (what the decode cache stores)
+    # repeat KV to full heads: keeps the head axis contiguously sharded
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    if cfg.use_flash_kernel and causal and not cross \
+            and cfg.sliding_window == 0 and S == T and S >= 256:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q.reshape(B, S, H, 1, hd), k, v,
+                                 scale=scale, causal=True)
+        o = o.reshape(B, S, H * hd)
+    elif S <= q_block:
+        mask = None
+        if causal and S == T:
+            idx = jnp.arange(S)
+            mask = idx[:, None] >= idx[None, :]
+            if cfg.sliding_window:
+                mask &= idx[:, None] - idx[None, :] < cfg.sliding_window
+        o = _sdpa_block(q, k, v, mask, scale).reshape(B, S, H * hd)
+    else:
+        # q-block chunking for BOTH causal and bidirectional attention —
+        # the (S x S) score matrix must never materialize at 32k+ tokens
+        nblk = S // q_block
+        assert S % q_block == 0, f"S={S} not divisible by q_block={q_block}"
+        qb = q.reshape(B, nblk, q_block, H, hd)
+
+        @jax.checkpoint  # recompute block logits in bwd: O(blk) live memory
+        def one_block(_, qi_i):
+            qi, i = qi_i
+            if causal:
+                row = i * q_block + jnp.arange(q_block)
+                col = jnp.arange(T)
+                mask = row[:, None] >= col[None, :]
+                if cfg.sliding_window:
+                    mask &= row[:, None] - col[None, :] < cfg.sliding_window
+            else:
+                mask = None
+            return None, _sdpa_block(qi, k, v, mask, scale)
+
+        _, ob = jax.lax.scan(one_block, None,
+                             (jnp.moveaxis(qb, 1, 0), jnp.arange(nblk)))
+        o = jnp.moveaxis(ob, 0, 1).reshape(B, S, H * hd)
+
+    out = o @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return out, (k_kv, v_kv)
+    return out
+
+
+def decode_attention(p: Params, x: jax.Array, position: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, cfg: ModelConfig, *,
+                     kv_positions: Optional[jax.Array] = None,
+                     update_cache: bool = True):
+    """Single-token decode against a (B, T, K, hd) KV cache.
+
+    Returns (y, k_cache, v_cache).  The new token's K/V are written at
+    ``cache_len`` (dynamic index).  With ``cfg.seq_shard_attn`` the cache's
+    T axis is sharded over 'model' and GSPMD turns the softmax/PV reduction
+    into a flash-decoding-style partial reduction + psum.
+    """
+    B, S1, d = x.shape  # S1 == 1
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+    T = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    positions = position[:, None] if position.ndim == 1 else position
+
+    if cfg.mrope_sections is not None and positions.ndim == 2:
+        positions = jnp.broadcast_to(positions[..., None], (*positions.shape, 3))
+
+    q, k_new, v_new = _project_qkv(
+        p, x, x, cfg, positions,
+        positions if kv_positions is None else kv_positions)
+
+    if update_cache:
+        # dynamic-slice write of the fresh K/V at cache_len
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, cache_len, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, cache_len, 0, 0))
+
+    qg = q.reshape(B, 1, K, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg,
+                        k_cache.astype(x.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    t_idx = jnp.arange(T)
+    valid = t_idx <= cache_len
+    if cfg.sliding_window:
+        valid &= t_idx > cache_len - cfg.sliding_window
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgst,btkh->bskgh", probs, v_cache.astype(x.dtype))
+    y = o.reshape(B, 1, H * hd) @ p["wo"].astype(x.dtype)
+    return y, k_cache, v_cache

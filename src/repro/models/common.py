@@ -1,0 +1,178 @@
+"""Model-stack common pieces: config, norms, RoPE (incl. M-RoPE), init.
+
+Functional style: parameters are plain pytrees (nested dicts of arrays);
+every layer is a pure function ``f(params, x, ...)``.  No flax/haiku —
+keeps tracing cheap, sharding explicit, and checkpointing trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes every assigned architecture (unused fields 0/None)."""
+
+    name: str = "model"
+    family: str = "dense"          # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None   # qwen2-vl
+    sliding_window: int = 0        # 0 -> full attention
+    # MLA (deepseek)
+    use_mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    moe_experts: int = 0           # 0 -> dense mlp
+    moe_top_k: int = 1
+    moe_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_aux_loss_coef: float = 0.01
+    moe_groups: int = 1            # token groups (align with data shards)
+    moe_impl: str = "gather"       # gather | sort
+    # MTP (deepseek multi-token prediction)
+    use_mtp: bool = False
+    mtp_loss_weight: float = 0.3
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_heads: int = 0             # 0 -> d_inner // 64
+    hybrid_shared_period: int = 6  # zamba2: shared attn every k mamba blocks
+    # xLSTM
+    xlstm_slstm_every: int = 2     # sLSTM block at layer i % k == 0, else mLSTM
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    # VLM / audio stubs: frontend provides embeddings directly
+    frontend_stub: bool = False
+    # numerics / partitioning
+    dtype: Any = jnp.bfloat16      # activation/compute dtype
+    param_dtype: Any = jnp.bfloat16
+    remat: str = "full"            # none | full | dots
+    use_flash_kernel: bool = False # Pallas flash-attention (TPU target)
+    seq_shard_attn: bool = True    # shard long KV over 'model' (flash-decode)
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or max(1, self.d_inner // 64)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(1, fan))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layer_norm(scale: jax.Array, bias: jax.Array, x: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Sequence[int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions (..., S, 3) = (t, h, w) ids;
+    the hd/2 frequency slots are split into ``sections`` (sum = hd/2), each
+    rotated by its own position stream."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)  # (hd/2,)
+    # section id per frequency slot
+    sec_id = np.repeat(np.arange(len(sections)), sections)
+    sec_id = jnp.asarray(sec_id)                                   # (hd/2,)
+    pos = positions.astype(jnp.float32)                            # (..., S, 3)
+    pos_per_slot = pos[..., sec_id]                                # (..., S, hd/2)
+    ang = pos_per_slot * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style sinusoidal embeddings (n, d)."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = np.zeros((n, d), dtype=np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are low-rank compressed; K/V are reconstructed from a
+shared latent ``c_kv`` (kv_lora_rank wide) plus a single shared RoPE key
+stream.  Decode runs in *absorbed* form: scores and values are computed
+directly against the cached latent — the KV cache is only
+``kv_lora_rank + qk_rope_head_dim`` wide per token (the production trick
+that makes MLA decode cheap).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, rms_norm
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_mla_params(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": dense_init(ks[0], (d, qr), cfg.param_dtype),
+        "q_norm": jnp.ones((qr,), cfg.param_dtype),
+        "wuq": dense_init(ks[1], (qr, H * (dn + dr)), cfg.param_dtype),
+        "wdkv": dense_init(ks[2], (d, kvr + dr), cfg.param_dtype),
+        "kv_norm": jnp.ones((kvr,), cfg.param_dtype),
+        "wuk": dense_init(ks[3], (kvr, H * dn), cfg.param_dtype),
+        "wuv": dense_init(ks[4], (kvr, H * dv), cfg.param_dtype),
+        "wo": dense_init(ks[5], (H * dv, d), cfg.param_dtype),
+    }
+
+
+def _compress(p: Params, x: jax.Array, cfg: ModelConfig, positions):
+    """Returns (q_nope, q_rope, c_kv, k_rope)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(p["q_norm"], x @ p["wdq"].astype(x.dtype), cfg.norm_eps)
+    q = (cq @ p["wuq"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv_full = x @ p["wdkv"].astype(x.dtype)
+    c_kv = rms_norm(p["kv_norm"], ckv_full[..., :cfg.kv_lora_rank],
+                    cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:][:, :, None, :]  # 1 shared head
+    if positions is not None:
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_attention(p: Params, x: jax.Array, positions: jax.Array,
+                  cfg: ModelConfig, *, q_block: int = 1024,
+                  return_cache: bool = False):
+    """Prefill/train MLA: reconstruct K/V from the latent, causal attention."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_nope, q_rope, c_kv, k_rope = _compress(p, x, cfg, positions)
+    k_nope = (c_kv @ p["wuk"].astype(x.dtype)).reshape(B, S, H, dn)
+    v = (c_kv @ p["wuv"].astype(x.dtype)).reshape(B, S, H, dv)
+
+    def block_attn(qn, qr, row_idx):
+        # scores: content (per-head k_nope) + shared rope stream
+        lg = jnp.einsum("bskh,btkh->bkst", qn, k_nope,
+                        preferred_element_type=jnp.float32)
+        lg += jnp.einsum("bskh,bth->bkst", qr, k_rope,
+                         preferred_element_type=jnp.float32)
+        lg *= scale
+        col = jnp.arange(S)
+        mask = row_idx[:, None] >= col[None, :]
+        lg = jnp.where(mask[None, None], lg, NEG_INF)
+        pr = jax.nn.softmax(lg, axis=-1).astype(x.dtype)
+        return jnp.einsum("bkst,btkh->bskh", pr, v)
+
+    if S <= q_block:
+        o = block_attn(q_nope, q_rope, jnp.arange(S))
+    else:
+        nblk = S // q_block
+        qn = jnp.moveaxis(q_nope.reshape(B, nblk, q_block, H, dn), 1, 0)
+        qr = jnp.moveaxis(q_rope.reshape(B, nblk, q_block, H, dr), 1, 0)
+
+        @jax.checkpoint  # recompute block logits in bwd: O(blk) live memory
+        def step(_, args):
+            qni, qri, i = args
+            rows = i * q_block + jnp.arange(q_block)
+            return None, block_attn(qni, qri, rows)
+
+        _, ob = jax.lax.scan(step, None, (qn, qr, jnp.arange(nblk)))
+        o = jnp.moveaxis(ob, 0, 1).reshape(B, S, H, dv)
+
+    out = o.reshape(B, S, H * dv) @ p["wo"].astype(x.dtype)
+    if return_cache:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def mla_decode(p: Params, x: jax.Array, position: jax.Array,
+               ckv_cache: jax.Array, krope_cache: jax.Array,
+               cache_len: jax.Array, cfg: ModelConfig):
+    """Absorbed-form MLA decode against the latent cache.
+
+    ckv_cache: (B, T, kv_lora_rank); krope_cache: (B, T, qk_rope_head_dim).
+    Scores: (W_uk^T q_nope) · c  +  q_rope · k_rope;  values in latent space
+    then projected once through W_uv.
+    """
+    B, S1, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    T = ckv_cache.shape[1]
+    scale = 1.0 / math.sqrt(dn + dr)
+    positions = position[:, None] if position.ndim == 1 else position
+
+    q_nope, q_rope, c_new, krope_new = _compress(p, x, cfg, positions)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_new.astype(ckv_cache.dtype), (0, cache_len, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, krope_new.astype(krope_cache.dtype), (0, cache_len, 0))
+
+    # absorb: q_eff[b,h,:] = q_nope[b,h] @ W_uk[h]  (latent-space query)
+    wuk = p["wuk"].astype(x.dtype).reshape(kvr, H, dn)
+    q_eff = jnp.einsum("bskh,ckh->bskc", q_nope, wuk)        # (B,1,H,kvr)
+
+    lg = jnp.einsum("bskc,btc->bkst", q_eff, ckv_cache.astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    lg += jnp.einsum("bskh,bth->bkst", q_rope, krope_cache.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    lg *= scale
+    valid = jnp.arange(T) <= cache_len
+    lg = jnp.where(valid[None, None, None, :], lg, NEG_INF)
+    pr = jax.nn.softmax(lg, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bkst,btc->bskc", pr, ckv_cache.astype(x.dtype))
+    wuv = p["wuv"].astype(x.dtype).reshape(kvr, H, dv)
+    o = jnp.einsum("bskc,ckh->bskh", o_lat, wuv).reshape(B, 1, H * dv)
+    y = o @ p["wo"].astype(x.dtype)
+    return y, ckv_cache, krope_cache

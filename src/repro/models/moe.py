@@ -1,0 +1,223 @@
+"""Mixture-of-Experts MLP: top-k routing, shared experts, EP sharding.
+
+Two dispatch implementations:
+
+* ``gather``  — capacity-slot dispatch via *index* tensors (no one-hot
+  einsum): tokens are assigned (expert, slot) positions with an intra-group
+  cumsum, an inverse map (E, C) -> token id is built by scatter, and the
+  expert inputs are a gather.  Tokens are first reshaped into ``moe_groups``
+  groups aligned with the data axis so the (E, C) buffers stay per-device
+  sized at any scale; GSPMD emits the EP all-to-all at the
+  (group->expert) resharding boundary.  Dropless up to the capacity factor.
+* ``sort``    — MegaBlocks-style: tokens argsorted by expert id, dense
+  per-expert GEMMs via ``jax.lax.ragged_dot`` when available.  Used by the
+  perf pass (no capacity dropping, no inverse-map scatter).
+
+Routing: softmax over router logits in fp32; optional aux-loss-free bias
+(DeepSeek-V3) applied to *selection only*; load-balancing aux loss
+returned for logging/training.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import logical_constraint as shard
+
+from .common import ModelConfig, dense_init
+
+Params = Dict[str, Any]
+
+
+def init_moe_params(key, cfg: ModelConfig) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "router_bias": jnp.zeros((E,), jnp.float32),   # aux-loss-free bias
+        "wi": dense_init(ks[1], (E, d, ff), cfg.param_dtype, fan_in=d),
+        "wg": dense_init(ks[2], (E, d, ff), cfg.param_dtype, fan_in=d),
+        "wo": dense_init(ks[3], (E, ff, d), cfg.param_dtype, fan_in=ff),
+    }
+    if cfg.moe_shared_experts:
+        sf = ff * cfg.moe_shared_experts
+        p["shared_wi"] = dense_init(ks[4], (d, sf), cfg.param_dtype)
+        p["shared_wg"] = dense_init(ks[5], (d, sf), cfg.param_dtype)
+        p["shared_wo"] = dense_init(ks[6], (sf, d), cfg.param_dtype)
+    return p
+
+
+def _route(p: Params, xf: jax.Array, cfg: ModelConfig):
+    """xf: (N, d) -> (probs (N,k), experts (N,k), aux_loss)."""
+    # bf16 matmul, fp32 accumulation: avoids an (N, d) fp32 activation copy
+    logits = jnp.einsum("nd,de->ne", xf, p["router"].astype(xf.dtype),
+                        preferred_element_type=jnp.float32)    # (N, E)
+    scores = jax.nn.softmax(logits, axis=-1)
+    select = scores + p["router_bias"][None, :]                # bias: selection only
+    _, experts = jax.lax.top_k(select, cfg.moe_top_k)          # (N, k)
+    probs = jnp.take_along_axis(scores, experts, axis=-1)
+    probs = probs / jnp.clip(probs.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    E = cfg.moe_experts
+    density = jnp.mean(
+        jax.nn.one_hot(experts[..., 0], E, dtype=jnp.float32), axis=0)
+    mean_probs = jnp.mean(scores, axis=0)
+    aux = E * jnp.sum(density * mean_probs) * cfg.moe_aux_loss_coef
+    return probs, experts, aux
+
+
+def _expert_ffn(wi, wg, wo, xin, dtype):
+    """xin: (E, C, d) -> (E, C, d); SwiGLU per expert."""
+    h = jnp.einsum("ecd,edf->ecf", xin, wi.astype(dtype))
+    g = jnp.einsum("ecd,edf->ecf", xin, wg.astype(dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo.astype(dtype))
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
+            impl: str = "gather") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    N = B * S
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    xf = x.reshape(N, d)
+    probs, experts, aux = _route(p, xf, cfg)
+
+    if impl == "sort":
+        y = _moe_sort(p, xf, probs, experts, cfg)
+    else:
+        y = _moe_gather(p, xf, probs, experts, cfg)
+
+    if cfg.moe_shared_experts:
+        h = xf @ p["shared_wi"].astype(x.dtype)
+        g = xf @ p["shared_wg"].astype(x.dtype)
+        y = y + (jax.nn.silu(g) * h) @ p["shared_wo"].astype(x.dtype)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_gather(p, xf, probs, experts, cfg: ModelConfig):
+    """Index-dispatch MoE (see module docstring)."""
+    N, d = xf.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    G = max(1, cfg.moe_groups)
+    while N % G:
+        G //= 2
+    n = N // G
+    C = int(max(4, cfg.moe_capacity_factor * n * k / E))
+    C = min(C, n * k)
+
+    xg = xf.reshape(G, n, d)
+    eg = experts.reshape(G, n, k)
+    pg = probs.reshape(G, n, k)
+
+    # slot position of each (token, k) within its (group, expert) capacity.
+    # Sort-based ranking: O(N*k) memory — an (N*k, E) one-hot cumsum would
+    # be terabytes at DeepSeek scale (1M tokens x 8 x 256 experts).
+    N_k = N * k
+    key = (jnp.arange(N_k, dtype=jnp.int32) // (n * k)) * E \
+        + experts.reshape(-1)                                   # (N*k,)
+    order = jnp.argsort(key)                                    # stable
+    sk = key[order]
+    counts = jnp.bincount(key, length=G * E)
+    starts = (jnp.cumsum(counts) - counts).astype(jnp.int32)
+    rank = jnp.arange(N_k, dtype=jnp.int32) - starts[sk]
+    pos_flat = jnp.zeros((N_k,), jnp.int32).at[order].set(rank)
+    pos = pos_flat.reshape(G, n, k)
+    keep = pos < C
+    # flattened (expert, slot) id; dropped tokens -> sentinel slot E*C
+    eidx = jnp.where(keep, eg * C + pos, E * C).astype(jnp.int32)
+
+    # inverse map: (G, E*C+1) slot -> source token id (sentinel n = zero row)
+    ginv = jnp.full((G, E * C + 1), n, jnp.int32)
+    gi = jnp.broadcast_to(jnp.arange(G)[:, None, None], eidx.shape)
+    ti = jnp.broadcast_to(jnp.arange(n)[None, :, None], eidx.shape)
+    ginv = ginv.at[gi, eidx].set(ti)
+    inv = ginv[:, :E * C]                                       # (G, E*C)
+
+    xgp = jnp.concatenate([xg, jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    xin = jnp.take_along_axis(xgp, inv[..., None], axis=1)      # (G,E*C,d)
+    xin = shard(xin.reshape(G, E, C, d), "batch", "experts", None, None)
+
+    # expert FFN (EP: E sharded on 'model', G rides the data axis; the
+    # (batch->experts) resharding boundary is the EP all-to-all)
+    h = jnp.einsum("gecd,edf->gecf", xin, p["wi"].astype(xf.dtype))
+    g_ = jnp.einsum("gecd,edf->gecf", xin, p["wg"].astype(xf.dtype))
+    yout = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g_) * h,
+                      p["wo"].astype(xf.dtype))
+    yout = shard(yout, "batch", "experts", None, None)
+    yflat = yout.reshape(G, E * C, d)
+
+    # combine: per-k gather + weighted accumulate (no (G,n,k,d) tensor)
+    y = jnp.zeros((G, n, d), xf.dtype)
+    for kk in range(k):
+        idx = jnp.minimum(eidx[:, :, kk], E * C - 1)
+        gk = (pg[:, :, kk] * keep[:, :, kk]).astype(xf.dtype)
+        yk = jnp.take_along_axis(yflat, idx[..., None], axis=1)
+        y = y + yk * gk[..., None]
+    return y.reshape(N, d)
+
+
+def _moe_sort(p, xf, probs, experts, cfg: ModelConfig):
+    """Sort-based dropless dispatch (perf path)."""
+    N, d = xf.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    expert_flat = experts.reshape(-1)                          # (N*k,)
+    order = jnp.argsort(expert_flat)
+    token_of = order // k
+    xin = xf[token_of]                                         # (N*k, d) sorted
+    group_sizes = jnp.bincount(expert_flat, length=E).astype(jnp.int32)
+
+    if hasattr(jax.lax, "ragged_dot"):
+        h = jax.lax.ragged_dot(xin, p["wi"].astype(xf.dtype), group_sizes)
+        g = jax.lax.ragged_dot(xin, p["wg"].astype(xf.dtype), group_sizes)
+        yo = jax.lax.ragged_dot(jax.nn.silu(g) * h,
+                                p["wo"].astype(xf.dtype), group_sizes)
+    else:  # pragma: no cover - fallback for jax without ragged_dot
+        seg = jnp.repeat(jnp.arange(E), N * k // E, total_repeat_length=N * k)
+        h = jnp.einsum("nd,ndf->nf", xin,
+                       p["wi"].astype(xf.dtype)[seg])
+        g = jnp.einsum("nd,ndf->nf", xin, p["wg"].astype(xf.dtype)[seg])
+        yo = jnp.einsum("nf,nfd->nd", jax.nn.silu(g) * h,
+                        p["wo"].astype(xf.dtype)[seg])
+
+    gate_sorted = probs.reshape(-1)[order].astype(xf.dtype)
+    y = jnp.zeros_like(xf).at[token_of].add(yo * gate_sorted[:, None])
+    return y
+
+
+def dense_ffn_init(key, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], (d, ff), cfg.param_dtype),
+        "wg": dense_init(ks[1], (d, ff), cfg.param_dtype),
+        "wo": dense_init(ks[2], (ff, d), cfg.param_dtype),
+    }
+
+
+def dense_ffn(p: Params, x: jax.Array) -> jax.Array:
+    """SwiGLU MLP.  The intermediate is pinned ff-sharded so GSPMD keeps
+    the wi/wg -> wo chain local per model shard and resolves the output
+    partial sums with one reduce-scatter at the (seq-sharded) residual."""
+    h = x @ p["wi"].astype(x.dtype)
+    g = x @ p["wg"].astype(x.dtype)
+    hg = shard(jax.nn.silu(g) * h, "batch", None, "ff")
+    return (hg @ p["wo"].astype(x.dtype))
+
+
+def gelu_ffn_init(key, cfg: ModelConfig) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": dense_init(ks[0], (d, ff), cfg.param_dtype),
+        "bi": jnp.zeros((ff,), cfg.param_dtype),
+        "wo": dense_init(ks[1], (ff, d), cfg.param_dtype),
+        "bo": jnp.zeros((d,), cfg.param_dtype),
+    }
+
+
+def gelu_ffn(p: Params, x: jax.Array) -> jax.Array:
+    """GELU MLP (whisper)."""
+    h = jax.nn.gelu(x @ p["wi"].astype(x.dtype) + p["bi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype) + p["bo"].astype(x.dtype)

@@ -1,0 +1,157 @@
+"""Mamba2 (SSD) block — chunked state-space duality algorithm.
+
+Training/prefill uses the SSD chunked algorithm (Mamba-2 paper §6):
+within-chunk attention-like form with cumulative-decay masks, inter-chunk
+``lax.scan`` carrying the (H, P, N) state.  Decode is the O(1) recurrence.
+State h_t = a_t h_{t-1} + dt_t B_t x_t,  y_t = C_t h_t + D x_t, with
+a_t = exp(dt_t * A_h) (scalar per head).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def init_mamba2_params(key, cfg: ModelConfig) -> Params:
+    d, din, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.n_ssm_heads
+    conv_dim = din + 2 * ns
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (din), x (din), B (ns), C (ns), dt (H)]
+        "w_in": dense_init(ks[0], (d, 2 * din + 2 * ns + H), cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), cfg.param_dtype,
+                             fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),          # A = -exp(a_log)
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((din,), cfg.param_dtype),
+        "norm_in": jnp.ones((d,), cfg.param_dtype),
+        "w_out": dense_init(ks[2], (din, d), cfg.param_dtype),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    din, ns, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = x @ p["w_in"].astype(x.dtype)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * ns]
+    dt = zxbcdt[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc: jax.Array, cfg: ModelConfig,
+                 conv_state=None):
+    """Depthwise causal conv, k=cfg.ssm_conv.  xbc: (B, S, conv_dim)."""
+    k = cfg.ssm_conv
+    w = p["conv_w"].astype(xbc.dtype)                    # (k, conv_dim)
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)               # (B, k-1, conv_dim)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    out = jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return out, new_state
+
+
+def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                   chunk: int = 256, return_state: bool = False):
+    """Train/prefill SSD.  x: (B, S, d) -> (B, S, d) [, final state]."""
+    B, S, d = x.shape
+    din, ns, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = din // H
+    x = rms_norm(p["norm_in"], x, cfg.norm_eps)
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(p, xbc, cfg)
+    xs = xbc[..., :din].reshape(B, S, H, P)
+    Bm = xbc[..., din:din + ns]                          # (B, S, N)
+    Cm = xbc[..., din + ns:]                             # (B, S, N)
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"][None, None])    # (B, S, H)
+    A = -jnp.exp(p["a_log"])                             # (H,)
+    log_a = dtp * A[None, None]                          # (B, S, H) <= 0
+
+    if S % chunk:
+        chunk = S  # tiny sequences: single chunk
+    nc = S // chunk
+    Q = chunk
+    # chunk-major leading axis for lax.scan; one chunk's (Q,Q,H) score
+    # tensor lives at a time (SSD's SRAM tile, expressed at the XLA level)
+    xs_c = jnp.moveaxis(xs.reshape(B, nc, Q, H, P), 1, 0)
+    B_c = jnp.moveaxis(Bm.reshape(B, nc, Q, ns), 1, 0).astype(jnp.float32)
+    C_c = jnp.moveaxis(Cm.reshape(B, nc, Q, ns), 1, 0).astype(jnp.float32)
+    la_c = jnp.moveaxis(log_a.reshape(B, nc, Q, H), 1, 0)
+    dt_c = jnp.moveaxis(dtp.reshape(B, nc, Q, H), 1, 0)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def one_chunk(h, inputs):
+        xc, bc, cc, lac, dtc = inputs                    # per-chunk slices
+        cum = jnp.cumsum(lac, axis=1)                    # (B,Q,H)
+        total = cum[:, -1]                               # (B,H)
+        # intra: scores[t,j] = (C_t.B_j) exp(cum_t - cum_j) dt_j, j <= t
+        cb = jnp.einsum("bqn,bkn->bqk", cc, bc)          # (B,Q,Q)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        scores = jnp.where(tri[None, :, :, None], jnp.exp(decay), 0.0) \
+            * cb[..., None] * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores,
+                             xc.astype(jnp.float32))
+        # inter: y_t += C_t (exp(cum_t) h_carry)
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cc, h) \
+            * jnp.exp(cum)[..., None]
+        # carry update: h' = exp(total) h + sum_j exp(total-cum_j) dt_j B_j x_j
+        wj = jnp.exp(total[:, None] - cum) * dtc         # (B,Q,H)
+        h_new = h * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqh,bqn,bqhp->bhpn", wj, bc, xc.astype(jnp.float32))
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P, ns), jnp.float32)
+    h_fin, y_c = jax.lax.scan(one_chunk, h0, (xs_c, B_c, C_c, la_c, dt_c))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(B, S, H, P)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    if return_state:
+        return out, {"h": h_fin, "conv": conv_state}
+    return out
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, P, ns = cfg.n_ssm_heads, cfg.d_inner // cfg.n_ssm_heads, cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, H, P, ns), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(p: Params, x: jax.Array, state: Dict, cfg: ModelConfig):
+    """Single-token recurrence.  x: (B, 1, d)."""
+    B = x.shape[0]
+    din, ns, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = din // H
+    x = rms_norm(p["norm_in"], x, cfg.norm_eps)
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(p, xbc, cfg, conv_state=state["conv"])
+    xs = xbc[:, 0, :din].reshape(B, H, P)
+    Bm = xbc[:, 0, din:din + ns].astype(jnp.float32)
+    Cm = xbc[:, 0, din + ns:].astype(jnp.float32)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])
+    a = jnp.exp(dtp * (-jnp.exp(p["a_log"]))[None])      # (B,H)
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtp, Bm, xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, din).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype), {"h": h, "conv": conv_state}

@@ -1,0 +1,735 @@
+"""Model assembly for all assigned architectures.
+
+One functional entry set, dispatched on ``cfg.family``:
+
+* ``init_params(cfg, key)``                      parameter pytree
+* ``forward(params, cfg, batch)``                logits (train/prefill)
+* ``loss_fn(params, cfg, batch)``                scalar loss + metrics
+* ``init_cache(cfg, batch, max_len)``            decode cache pytree
+* ``decode_step(params, cfg, cache, tokens, cache_len)``  one-token decode
+* ``cache_logical_axes(cfg)``                    sharding annotations
+
+Layers are stacked (leading L dim) and executed with ``lax.scan`` so the
+HLO stays one-layer-sized; ``cfg.remat`` wraps the block in
+``jax.checkpoint``.  Activation shardings are logical
+(:func:`repro.parallel.logical_constraint`) and resolve against whatever
+mesh is active — including none (single-device smoke tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel import logical_constraint as shard
+
+from .attention import (decode_attention, init_attention_params,
+                        multihead_attention)
+from .common import (ModelConfig, dense_init, embed_init, layer_norm,
+                     rms_norm, sinusoidal_positions)
+from .mla import init_mla_params, mla_attention, mla_decode
+from .moe import (dense_ffn, dense_ffn_init, gelu_ffn, gelu_ffn_init,
+                  init_moe_params, moe_ffn)
+from .ssm import (init_mamba2_params, mamba2_decode, mamba2_forward,
+                  mamba2_init_state)
+from .xlstm import (init_mlstm_params, init_slstm_params, mlstm_decode,
+                    mlstm_forward, mlstm_init_state, slstm_decode,
+                    slstm_forward, slstm_init_state)
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_decoder_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                 "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    if cfg.use_mla:
+        p["attn"] = init_mla_params(ks[0], cfg)
+    else:
+        p["attn"] = init_attention_params(ks[0], cfg)
+    if cfg.moe_experts:
+        p["moe"] = init_moe_params(ks[1], cfg)
+    else:
+        p["mlp"] = dense_ffn_init(ks[1], cfg)
+    return p
+
+
+def _stack(blocks):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    p: Params = {}
+    p["embed"] = embed_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                            cfg.param_dtype)
+    p["final_norm"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab_size),
+                                  cfg.param_dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        p["layers"] = _stack([_init_decoder_block(keys[i], cfg)
+                              for i in range(cfg.n_layers)])
+        if cfg.use_mtp:
+            p["mtp"] = {
+                "proj": dense_init(keys[-3], (2 * cfg.d_model, cfg.d_model),
+                                   cfg.param_dtype),
+                "block": _init_decoder_block(keys[-4], cfg),
+                "ln_h": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "ln_e": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            }
+    elif fam == "hybrid":
+        p["layers"] = _stack([init_mamba2_params(keys[i], cfg)
+                              for i in range(cfg.n_layers)])
+        kk = jax.random.split(keys[-3], 3)
+        p["shared_attn"] = {
+            "ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "attn": init_attention_params(kk[0], cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "mlp": dense_ffn_init(kk[1], cfg),
+        }
+    elif fam == "ssm":
+        assert cfg.n_layers % 2 == 0
+        npairs = cfg.n_layers // 2
+        p["layers"] = {
+            "slstm": _stack([init_slstm_params(keys[2 * i], cfg)
+                             for i in range(npairs)]),
+            "mlstm": _stack([init_mlstm_params(keys[2 * i + 1], cfg)
+                             for i in range(npairs)]),
+        }
+    elif fam == "audio":
+        enc, dec = [], []
+        for i in range(cfg.n_encoder_layers):
+            ks = jax.random.split(keys[i], 2)
+            enc.append({
+                "ln1_s": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "ln1_b": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+                "attn": init_attention_params(ks[0], cfg),
+                "ln2_s": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "ln2_b": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+                "mlp": gelu_ffn_init(ks[1], cfg),
+            })
+        for i in range(cfg.n_layers):
+            ks = jax.random.split(keys[cfg.n_encoder_layers + i], 3)
+            dec.append({
+                "ln1_s": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "ln1_b": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+                "attn": init_attention_params(ks[0], cfg),
+                "lnx_s": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "lnx_b": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+                "xattn": init_attention_params(ks[1], cfg, cross=True),
+                "ln2_s": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "ln2_b": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+                "mlp": gelu_ffn_init(ks[2], cfg),
+            })
+        p["enc_layers"] = _stack(enc)
+        p["dec_layers"] = _stack(dec)
+        p["enc_final_s"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+        p["enc_final_b"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+        # sized for the decode_32k dry-run cell (whisper convention is 448;
+        # mechanical lowering far beyond it — see configs/whisper_tiny.py)
+        p["dec_pos_embed"] = embed_init(keys[-5], (32768, cfg.d_model),
+                                        cfg.param_dtype)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _decoder_block_apply(cfg: ModelConfig, lp: Params, x, positions):
+    # Megatron-style sequence parallelism: the residual stream lives
+    # seq-sharded (cheap remat residuals); activations are all-gathered to
+    # full sequence right before each matmul region and reduce-scattered
+    # back at the residual add.  Without the explicit gather, GSPMD
+    # resolves the seq/ff axis conflict by replicating whole weight
+    # matrices instead (~25x the wire bytes — EXPERIMENTS.md §Perf).
+    h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+    h = shard(h, "batch", None, "embed")          # all-gather seq
+    if cfg.use_mla:
+        a = mla_attention(lp["attn"], h, positions, cfg)
+    else:
+        a = multihead_attention(lp["attn"], h, positions, cfg, causal=True)
+    x = shard(x + a, "batch", "seq", "embed")     # reduce-scatter seq
+    h = rms_norm(lp["ln2"], x, cfg.norm_eps)
+    h = shard(h, "batch", None, "embed")          # all-gather seq
+    if cfg.moe_experts:
+        f, aux = moe_ffn(lp["moe"], h, cfg, impl=cfg.moe_impl)
+    else:
+        f, aux = dense_ffn(lp["mlp"], h), jnp.zeros((), jnp.float32)
+    return shard(x + f, "batch", "seq", "embed"), aux
+
+
+def _run_decoder_stack(params, cfg: ModelConfig, x, positions):
+    block = _maybe_remat(
+        functools.partial(_decoder_block_apply, cfg), cfg)
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, a = block(lp, h, positions)
+        return (h2, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return x, aux
+
+
+def _run_hybrid_stack(params, cfg: ModelConfig, x, positions):
+    shared = params["shared_attn"]
+    period = cfg.hybrid_shared_period
+
+    def apply_shared(h):
+        a = multihead_attention(shared["attn"],
+                                rms_norm(shared["ln"], h, cfg.norm_eps),
+                                positions, cfg, causal=True)
+        h = h + a
+        f = dense_ffn(shared["mlp"], rms_norm(shared["ln2"], h, cfg.norm_eps))
+        return h + f
+
+    def block(lp, i, h):
+        h = jax.lax.cond(i % period == 0, apply_shared, lambda y: y, h)
+        m = mamba2_forward(lp, h, cfg)
+        return shard(h + m, "batch", "seq", "embed")
+
+    block = _maybe_remat(block, cfg)
+
+    def body(h, inputs):
+        lp, i = inputs
+        return block(lp, i, h), None
+
+    x, _ = jax.lax.scan(body, x,
+                        (params["layers"], jnp.arange(cfg.n_layers)))
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _run_ssm_stack(params, cfg: ModelConfig, x):
+    def pair(lp, h):
+        h = h + slstm_forward(lp["slstm"], h, cfg)
+        h = h + mlstm_forward(lp["mlstm"], h, cfg)
+        return shard(h, "batch", "seq", "embed")
+
+    pair = _maybe_remat(pair, cfg)
+
+    def body(h, lp):
+        return pair(lp, h), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _lm_head(params, cfg: ModelConfig, x):
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = x @ w
+    return shard(logits, "batch", None, "vocab")
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens].astype(cfg.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _whisper_encode(params, cfg: ModelConfig, frames):
+    B, S, _ = frames.shape
+    pos = jnp.asarray(sinusoidal_positions(S, cfg.d_model),
+                      dtype=cfg.dtype)
+    x = frames.astype(cfg.dtype) + pos[None]
+
+    def body(h, lp):
+        a = multihead_attention(
+            lp["attn"], layer_norm(lp["ln1_s"], lp["ln1_b"], h), None, cfg,
+            causal=False)
+        h = h + a
+        f = gelu_ffn(lp["mlp"], layer_norm(lp["ln2_s"], lp["ln2_b"], h))
+        return h + f, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return layer_norm(params["enc_final_s"], params["enc_final_b"], x)
+
+
+def _whisper_decode_stack(params, cfg: ModelConfig, x, enc_out):
+    def body(h, lp):
+        a = multihead_attention(
+            lp["attn"], layer_norm(lp["ln1_s"], lp["ln1_b"], h), None, cfg,
+            causal=True)
+        h = h + a
+        c = multihead_attention(
+            lp["xattn"], layer_norm(lp["lnx_s"], lp["lnx_b"], h), None, cfg,
+            causal=False, x_kv=enc_out)
+        h = h + c
+        f = gelu_ffn(lp["mlp"], layer_norm(lp["ln2_s"], lp["ln2_b"], h))
+        return h + f, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["dec_layers"])
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), aux_loss)."""
+    fam = cfg.family
+    if fam == "audio":
+        enc = _whisper_encode(params, cfg, batch["frames"])
+        tokens = batch["tokens"]
+        x = _embed_tokens(params, cfg, tokens)
+        S = tokens.shape[1]
+        x = x + params["dec_pos_embed"][:S][None].astype(x.dtype)
+        x = _whisper_decode_stack(params, cfg, x, enc)
+        # whisper final norm uses LayerNorm; reuse final_norm as scale
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].astype(x.dtype).T
+        else:
+            logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, jnp.zeros((), jnp.float32)
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+
+    if fam == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 1, 0))
+
+    if cfg.mrope_sections is not None:
+        positions = batch.get("positions")
+        if positions is None:
+            t = jnp.arange(S)[None, :, None]
+            positions = jnp.broadcast_to(t, (B, S, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if fam in ("dense", "moe", "vlm"):
+        x, aux = _run_decoder_stack(params, cfg, x, positions)
+    elif fam == "hybrid":
+        x, aux = _run_hybrid_stack(params, cfg, x, positions)
+    elif fam == "ssm":
+        x, aux = _run_ssm_stack(params, cfg, x)
+    else:
+        raise ValueError(fam)
+    return _lm_head(params, cfg, x), aux
+
+
+# ===========================================================================
+# prefill (forward + cache extraction for serving)
+# ===========================================================================
+
+def prefill_step(params: Params, cfg: ModelConfig,
+                 batch: Dict[str, jax.Array]):
+    """Forward pass that also returns the decode cache built from the
+    prompt.  Cache layouts match ``decode_step``'s expectations (length-S
+    KV; the serving engine right-pads to its max length)."""
+    fam = cfg.family
+    if fam == "audio":
+        enc = _whisper_encode(params, cfg, batch["frames"])
+        tokens = batch["tokens"]
+        x = _embed_tokens(params, cfg, tokens)
+        S = tokens.shape[1]
+        x = x + params["dec_pos_embed"][:S][None].astype(x.dtype)
+
+        def body(h, lp):
+            a, kv = multihead_attention(
+                lp["attn"], layer_norm(lp["ln1_s"], lp["ln1_b"], h), None,
+                cfg, causal=True, return_kv=True)
+            h = h + a
+            c, xkv = multihead_attention(
+                lp["xattn"], layer_norm(lp["lnx_s"], lp["lnx_b"], h), None,
+                cfg, causal=False, x_kv=enc, return_kv=True)
+            h = h + c
+            f = gelu_ffn(lp["mlp"], layer_norm(lp["ln2_s"], lp["ln2_b"], h))
+            return h + f, (kv[0], kv[1], xkv[0], xkv[1])
+
+        x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = x @ (params["embed"].astype(x.dtype).T if cfg.tie_embeddings
+                      else params["lm_head"].astype(x.dtype))
+        return logits, {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    if fam == "vlm" and "patch_embeds" in batch:
+        x = jax.lax.dynamic_update_slice(
+            x, batch["patch_embeds"].astype(x.dtype), (0, 1, 0))
+    if cfg.mrope_sections is not None:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, lp):
+            hn = rms_norm(lp["ln1"], h, cfg.norm_eps)
+            if cfg.use_mla:
+                a, kv = mla_attention(lp["attn"], hn, positions, cfg,
+                                      return_cache=True)
+            else:
+                a, kv = multihead_attention(lp["attn"], hn, positions, cfg,
+                                            causal=True, return_kv=True)
+            h = shard(h + a, "batch", None, "embed")
+            hn = rms_norm(lp["ln2"], h, cfg.norm_eps)
+            if cfg.moe_experts:
+                f, _ = moe_ffn(lp["moe"], hn, cfg, impl=cfg.moe_impl)
+            else:
+                f = dense_ffn(lp["mlp"], hn)
+            return shard(h + f, "batch", None, "embed"), kv
+
+        x, kv = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        cache = ({"ckv": kv[0], "krope": kv[1]} if cfg.use_mla
+                 else {"k": kv[0], "v": kv[1]})
+        return _lm_head(params, cfg, x), cache
+
+    if fam == "hybrid":
+        shared = params["shared_attn"]
+        period = cfg.hybrid_shared_period
+        W = min(S, cfg.sliding_window or S)
+
+        def block(lp, i, h):
+            def apply_shared(h):
+                a, (kw, vw) = multihead_attention(
+                    shared["attn"], rms_norm(shared["ln"], h, cfg.norm_eps),
+                    positions, cfg, causal=True, return_kv=True)
+                h = h + a
+                f = dense_ffn(shared["mlp"],
+                              rms_norm(shared["ln2"], h, cfg.norm_eps))
+                return h + f, kw[:, -W:], vw[:, -W:]
+
+            def no_shared(h):
+                z = jnp.zeros((h.shape[0], W, cfg.n_kv_heads, cfg.hd),
+                              h.dtype)
+                return h, z, z
+
+            h, kw, vw = jax.lax.cond(i % period == 0, apply_shared,
+                                     no_shared, h)
+            m, st = mamba2_forward(lp, h, cfg, return_state=True)
+            return shard(h + m, "batch", "seq", "embed"), \
+                (st["h"], st["conv"], kw, vw)
+
+        def body(h, inputs):
+            lp, i = inputs
+            return block(lp, i, h)
+
+        x, (hs, convs, kws, vws) = jax.lax.scan(
+            body, x, (params["layers"], jnp.arange(cfg.n_layers)))
+        cache = {"ssm_h": hs, "ssm_conv": convs,
+                 "attn_k": kws[::cfg.hybrid_shared_period],
+                 "attn_v": vws[::cfg.hybrid_shared_period]}
+        return _lm_head(params, cfg, x), cache
+
+    if fam == "ssm":
+        def body(h, lp):
+            s, sfin = slstm_forward(lp["slstm"], h, cfg, return_state=True)
+            h = h + s
+            m, mfin = mlstm_forward(lp["mlstm"], h, cfg, return_state=True)
+            return shard(h + m, "batch", "seq", "embed"), \
+                (sfin["c"], sfin["n"], sfin["h"], sfin["m"],
+                 mfin["c"], mfin["n"], mfin["m"])
+
+        x, outs = jax.lax.scan(body, x, params["layers"])
+        cache = dict(zip(["s_c", "s_n", "s_h", "s_m", "m_c", "m_n", "m_m"],
+                         outs))
+        return _lm_head(params, cfg, x), cache
+
+    raise ValueError(fam)
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+def _xent(logits, labels, mask=None):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    logits, aux = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+    else:
+        mask = batch.get("loss_mask")
+    loss = _xent(logits, labels, mask)
+
+    metrics = {"ce_loss": loss, "aux_loss": aux}
+    if cfg.use_mtp and "mtp" in params:
+        mtp_loss = _mtp_loss(params, cfg, batch, tokens)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + cfg.mtp_loss_weight * mtp_loss
+    total = loss + aux
+    metrics["loss"] = total
+    return total, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, batch, tokens):
+    """DeepSeek-V3 MTP (depth 1): predict token t+2 from h_t ++ emb_{t+1}."""
+    mtp = params["mtp"]
+    # recompute trunk hidden states cheaply? reuse forward's trunk would
+    # need plumbing; MTP here re-embeds and runs ONE block over the shifted
+    # stream — the paper's MTP module operates on final hidden states, so
+    # we take the main-path embedding as a proxy trunk for the dry-run and
+    # training alike (documented simplification, DESIGN.md §4).
+    B, S = tokens.shape
+    h = _embed_tokens(params, cfg, tokens)
+    e_next = _embed_tokens(params, cfg,
+                           jnp.roll(tokens, -1, axis=1))
+    hcat = jnp.concatenate([rms_norm(mtp["ln_h"], h, cfg.norm_eps),
+                            rms_norm(mtp["ln_e"], e_next, cfg.norm_eps)],
+                           axis=-1)
+    x = hcat @ mtp["proj"].astype(h.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    x, _ = _decoder_block_apply(cfg, mtp["block"], x, positions)
+    logits = _lm_head(params, cfg, x)
+    labels = jnp.roll(tokens, -2, axis=1)
+    mask = jnp.ones((B, S), jnp.float32).at[:, -2:].set(0.0)
+    return _xent(logits, labels, mask)
+
+
+# ===========================================================================
+# decode (serving)
+# ===========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Dict[str, jax.Array]:
+    fam = cfg.family
+    hd, K, L = cfg.hd, cfg.n_kv_heads, cfg.n_layers
+    cdt = cfg.dtype
+    if fam in ("dense", "vlm"):
+        return {"k": jnp.zeros((L, batch, max_len, K, hd), cdt),
+                "v": jnp.zeros((L, batch, max_len, K, hd), cdt)}
+    if fam == "moe":
+        if cfg.use_mla:
+            return {"ckv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), cdt),
+                    "krope": jnp.zeros((L, batch, max_len,
+                                        cfg.qk_rope_head_dim), cdt)}
+        return {"k": jnp.zeros((L, batch, max_len, K, hd), cdt),
+                "v": jnp.zeros((L, batch, max_len, K, hd), cdt)}
+    if fam == "hybrid":
+        npts = (cfg.n_layers + cfg.hybrid_shared_period - 1) \
+            // cfg.hybrid_shared_period
+        W = min(max_len, cfg.sliding_window or max_len)
+        st = mamba2_init_state(cfg, batch, cdt)
+        return {
+            "ssm_h": jnp.zeros((L, *st["h"].shape), jnp.float32),
+            "ssm_conv": jnp.zeros((L, *st["conv"].shape), cdt),
+            "attn_k": jnp.zeros((npts, batch, W, K, hd), cdt),
+            "attn_v": jnp.zeros((npts, batch, W, K, hd), cdt),
+        }
+    if fam == "ssm":
+        np_ = cfg.n_layers // 2
+        s0 = slstm_init_state(cfg, batch)
+        m0 = mlstm_init_state(cfg, batch)
+        return {
+            "s_c": jnp.zeros((np_, *s0["c"].shape), jnp.float32),
+            "s_n": jnp.zeros((np_, *s0["n"].shape), jnp.float32),
+            "s_h": jnp.zeros((np_, *s0["h"].shape), jnp.float32),
+            "s_m": jnp.full((np_, *s0["m"].shape), -1e30, jnp.float32),
+            "m_c": jnp.zeros((np_, *m0["c"].shape), jnp.float32),
+            "m_n": jnp.zeros((np_, *m0["n"].shape), jnp.float32),
+            "m_m": jnp.full((np_, *m0["m"].shape), -1e30, jnp.float32),
+        }
+    if fam == "audio":
+        return {
+            "k": jnp.zeros((L, batch, max_len, K, hd), cdt),
+            "v": jnp.zeros((L, batch, max_len, K, hd), cdt),
+            "cross_k": jnp.zeros((L, batch, enc_len or 1500, K, hd), cdt),
+            "cross_v": jnp.zeros((L, batch, enc_len or 1500, K, hd), cdt),
+        }
+    raise ValueError(fam)
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    """Logical sharding for each cache entry (None -> replicated dim)."""
+    seq = "seq" if cfg.seq_shard_attn else None
+    kvh = None if cfg.seq_shard_attn else "kv_heads"
+    fam = cfg.family
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.use_mla):
+        return {"k": (None, "batch", seq, kvh, None),
+                "v": (None, "batch", seq, kvh, None)}
+    if fam == "moe":
+        return {"ckv": (None, "batch", seq, None),
+                "krope": (None, "batch", seq, None)}
+    if fam == "hybrid":
+        return {"ssm_h": (None, "batch", "heads", None, None),
+                "ssm_conv": (None, "batch", None, None),
+                "attn_k": (None, "batch", seq, kvh, None),
+                "attn_v": (None, "batch", seq, kvh, None)}
+    if fam == "ssm":
+        return {"s_c": (None, "batch", None, None),
+                "s_n": (None, "batch", None, None),
+                "s_h": (None, "batch", None, None),
+                "s_m": (None, "batch", None),
+                "m_c": (None, "batch", "heads", None, None),
+                "m_n": (None, "batch", "heads", None),
+                "m_m": (None, "batch", None)}
+    if fam == "audio":
+        return {"k": (None, "batch", seq, kvh, None),
+                "v": (None, "batch", seq, kvh, None),
+                "cross_k": (None, "batch", None, kvh, None),
+                "cross_v": (None, "batch", None, kvh, None)}
+    raise ValueError(fam)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
+                tokens: jax.Array, cache_len: jax.Array):
+    """One-token decode.  tokens: (B, 1) int32 -> (logits (B,1,V), cache)."""
+    fam = cfg.family
+    B = tokens.shape[0]
+    x = _embed_tokens(params, cfg, tokens)
+    pos = jnp.full((B,), cache_len, jnp.int32)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, inputs):
+            lp, kc, vc_or = inputs
+            hn = rms_norm(lp["ln1"], h, cfg.norm_eps)
+            if cfg.use_mla:
+                a, c1, c2 = mla_decode(lp["attn"], hn, pos, kc, vc_or,
+                                       cache_len, cfg)
+            else:
+                a, c1, c2 = decode_attention(lp["attn"], hn, pos, kc, vc_or,
+                                             cache_len, cfg)
+            h = h + a
+            hn = rms_norm(lp["ln2"], h, cfg.norm_eps)
+            if cfg.moe_experts:
+                f, _ = moe_ffn(lp["moe"], hn, cfg, impl=cfg.moe_impl)
+            else:
+                f = dense_ffn(lp["mlp"], hn)
+            return h + f, (c1, c2)
+
+        if cfg.use_mla:
+            xs = (params["layers"], cache["ckv"], cache["krope"])
+        else:
+            xs = (params["layers"], cache["k"], cache["v"])
+        x, (c1, c2) = jax.lax.scan(body, x, xs)
+        if cfg.use_mla:
+            cache = {"ckv": c1, "krope": c2}
+        else:
+            cache = {"k": c1, "v": c2}
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        period = cfg.hybrid_shared_period
+        W = cache["attn_k"].shape[2]
+        # effective in-window write position for the ring cache
+        wpos = jnp.minimum(cache_len, W - 1)
+        kc_all, vc_all = cache["attn_k"], cache["attn_v"]
+
+        def body(carry, inputs):
+            h, kc_all, vc_all = carry
+            lp, i = inputs
+
+            def with_attn(h, kc_all=kc_all, vc_all=vc_all):
+                j = i // period
+                kc = kc_all[j]
+                vc = vc_all[j]
+                # sliding-window ring: once full, shift left by one so the
+                # write position stays at W-1 (O(W) copy; perf pass note)
+                full = cache_len >= W
+                kc = jnp.where(full, jnp.roll(kc, -1, axis=1), kc)
+                vc = jnp.where(full, jnp.roll(vc, -1, axis=1), vc)
+                a, kc2, vc2 = decode_attention(
+                    shared["attn"], rms_norm(shared["ln"], h, cfg.norm_eps),
+                    pos, kc, vc, wpos, cfg)
+                h2 = h + a
+                f = dense_ffn(shared["mlp"],
+                              rms_norm(shared["ln2"], h2, cfg.norm_eps))
+                kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc2, j, 0)
+                vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc2, j, 0)
+                return h2 + f, kc_all, vc_all
+
+            h, kc_all, vc_all = jax.lax.cond(
+                i % period == 0, with_attn,
+                lambda h, kc_all=kc_all, vc_all=vc_all: (h, kc_all, vc_all), h)
+            m, st2 = mamba2_decode(lp["blk"], h, {"h": lp["h"],
+                                                  "conv": lp["conv"]}, cfg)
+            return (h + m, kc_all, vc_all), (st2["h"], st2["conv"])
+
+        xs = ({"blk": params["layers"], "h": cache["ssm_h"],
+               "conv": cache["ssm_conv"]}, jnp.arange(cfg.n_layers))
+        (x, kc_all, vc_all), (hs, convs) = jax.lax.scan(body, (x, kc_all, vc_all), xs)
+        cache = {"ssm_h": hs, "ssm_conv": convs,
+                 "attn_k": kc_all, "attn_v": vc_all}
+
+    elif fam == "ssm":
+        def body(h, lp):
+            s_state = {"c": lp["s_c"], "n": lp["s_n"], "h": lp["s_h"],
+                       "m": lp["s_m"]}
+            s, s2 = slstm_decode(lp["blk"]["slstm"], h, s_state, cfg)
+            h = h + s
+            m_state = {"c": lp["m_c"], "n": lp["m_n"], "m": lp["m_m"]}
+            m, m2 = mlstm_decode(lp["blk"]["mlstm"], h, m_state, cfg)
+            return h + m, (s2["c"], s2["n"], s2["h"], s2["m"],
+                           m2["c"], m2["n"], m2["m"])
+
+        xs = {"blk": params["layers"], "s_c": cache["s_c"],
+              "s_n": cache["s_n"], "s_h": cache["s_h"], "s_m": cache["s_m"],
+              "m_c": cache["m_c"], "m_n": cache["m_n"], "m_m": cache["m_m"]}
+        x, outs = jax.lax.scan(body, x, xs)
+        cache = dict(zip(["s_c", "s_n", "s_h", "s_m", "m_c", "m_n", "m_m"],
+                         outs))
+
+    elif fam == "audio":
+        x = x + params["dec_pos_embed"][cache_len][None, None].astype(x.dtype)
+
+        def body(h, inputs):
+            lp, kc, vc, ck, cv = inputs
+            a, kc, vc = decode_attention(
+                lp["attn"], layer_norm(lp["ln1_s"], lp["ln1_b"], h), pos,
+                kc, vc, cache_len, cfg)
+            h = h + a
+            # cross attention against the precomputed encoder KV
+            c, _, _ = decode_attention(
+                lp["xattn"], layer_norm(lp["lnx_s"], lp["lnx_b"], h),
+                pos, ck, cv, jnp.asarray(ck.shape[1] - 1, jnp.int32), cfg,
+                update_cache=False)
+            h = h + c
+            f = gelu_ffn(lp["mlp"], layer_norm(lp["ln2_s"], lp["ln2_b"], h))
+            return h + f, (kc, vc)
+
+        xs = (params["dec_layers"], cache["k"], cache["v"],
+              cache["cross_k"], cache["cross_v"])
+        x, (kc, vc) = jax.lax.scan(body, x, xs)
+        cache = {"k": kc, "v": vc, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+    else:
+        raise ValueError(fam)
+
+    logits = _lm_head(params, cfg, x)
+    return logits, cache

@@ -1,0 +1,255 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) — the [ssm] assigned architecture.
+
+mLSTM parallel form is attention-like with an exponential-gate decay
+matrix D (stabilized with a running max); decode is the O(1) recurrence on
+the (hd × hd) matrix memory C, normalizer n, and stabilizer m.
+
+sLSTM runs as a ``lax.scan`` over time with per-head block-diagonal
+recurrent weights and exponential input / sigmoid-forget gating.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, layer_norm, rms_norm
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_params(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dp = 2 * d                      # up-projection factor 2 (xLSTM paper)
+    hd = dp // H
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * dp), cfg.param_dtype),     # x, gate
+        "wq": dense_init(ks[1], (dp, dp), cfg.param_dtype),
+        "wk": dense_init(ks[2], (dp, dp), cfg.param_dtype),
+        "wv": dense_init(ks[3], (dp, dp), cfg.param_dtype),
+        "w_if": dense_init(ks[4], (dp, 2 * H), cfg.param_dtype),     # i,f gates
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]
+                                ).astype(cfg.param_dtype),
+        "norm": jnp.ones((dp,), cfg.param_dtype),
+        "norm_in": jnp.ones((d,), cfg.param_dtype),
+        "w_down": dense_init(ks[5], (dp, d), cfg.param_dtype),
+    }
+
+
+def mlstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  chunk: int = 256, return_state: bool = False):
+    """Chunkwise-parallel (training) mLSTM.  x: (B, S, d).
+
+    Within a chunk: stabilized decay matrix D (Q, Q, H); across chunks:
+    ``lax.scan`` carrying the stabilized matrix memory (C, n, m) — so the
+    (S, S) matrix never materializes (cf. the SSD chunk algorithm).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    x = rms_norm(p["norm_in"], x, cfg.norm_eps)
+    up = x @ p["w_up"].astype(x.dtype)
+    xin, gate = jnp.split(up, 2, axis=-1)
+    dp = xin.shape[-1]
+    hd = dp // H
+
+    q = (xin @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xin @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd) / (hd ** 0.5)
+    v = (xin @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    gates = (xin @ p["w_if"].astype(x.dtype)
+             + p["b_if"].astype(x.dtype)).astype(jnp.float32)
+    ig, fg = gates[..., :H], gates[..., H:]                     # (B,S,H)
+    log_f = jax.nn.log_sigmoid(fg)
+
+    if S % chunk:
+        chunk = S
+    Q, nc = chunk, S // chunk
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(B, nc, Q, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc = (to_chunks(a.astype(jnp.float32)) for a in (q, k, v))
+    ic, fc = to_chunks(ig), to_chunks(log_f)
+
+    def one_chunk(carry, inputs):
+        C, n, mc = carry            # (B,H,hd,hd), (B,H,hd), (B,H)
+        qi, ki, vi, ii, fi = inputs
+        lf = jnp.cumsum(fi, axis=1)                      # (B,Q,H)
+        total = lf[:, -1]                                # (B,H)
+        # intra-chunk exponents b[t,j] = lf_t - lf_j + i_j  (j <= t)
+        bmat = lf[:, :, None, :] - lf[:, None, :, :] + ii[:, None, :, :]
+        bmat = jnp.where(tri[None, :, :, None], bmat, NEG_INF)
+        a_t = lf + mc[:, None, :]                        # carry exponent
+        m_t = jnp.maximum(jnp.max(bmat, axis=2), a_t)    # (B,Q,H)
+        dstab = jnp.exp(bmat - m_t[:, :, None, :])
+        scores = jnp.einsum("bthd,bjhd->btjh", qi, ki) * dstab
+        num = jnp.einsum("btjh,bjhd->bthd", scores, vi)
+        den = scores.sum(axis=2)                         # (B,Q,H)
+        cw = jnp.exp(a_t - m_t)                          # carry weight
+        num = num + cw[..., None] * jnp.einsum("bthd,bhdv->bthv", qi, C)
+        den = den + cw * jnp.einsum("bthd,bhd->bth", qi, n)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update (stabilized at m_new)
+        wj = total[:, None] - lf + ii                    # (B,Q,H)
+        m_new = jnp.maximum(mc + total, jnp.max(wj, axis=1))
+        kv = jnp.einsum("bjh,bjhd,bjhv->bhdv",
+                        jnp.exp(wj - m_new[:, None]), ki, vi)
+        ksum = jnp.einsum("bjh,bjhd->bhd",
+                          jnp.exp(wj - m_new[:, None]), ki)
+        decay = jnp.exp(mc + total - m_new)
+        C2 = C * decay[..., None, None] + kv
+        n2 = n * decay[..., None] + ksum
+        return (C2, n2, m_new), y
+
+    carry0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+              jnp.zeros((B, H, hd), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    fin, y_c = jax.lax.scan(one_chunk, carry0, (qc, kc, vc, ic, fc))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(B, S, dp).astype(x.dtype)
+
+    y = rms_norm(p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    out = y @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, {"c": fin[0], "n": fin[1], "m": fin[2]}
+    return out
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    hd = 2 * cfg.d_model // H
+    return {
+        "c": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, x: jax.Array, state: Dict, cfg: ModelConfig):
+    """Recurrent mLSTM step.  x: (B, 1, d)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    x = rms_norm(p["norm_in"], x, cfg.norm_eps)
+    up = x @ p["w_up"].astype(x.dtype)
+    xin, gate = jnp.split(up, 2, axis=-1)
+    dp = xin.shape[-1]
+    hd = dp // H
+    q = (xin @ p["wq"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    k = ((xin @ p["wk"].astype(x.dtype)).reshape(B, H, hd)
+         / (hd ** 0.5)).astype(jnp.float32)
+    v = (xin @ p["wv"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    gates = (xin @ p["w_if"].astype(x.dtype)
+             + p["b_if"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+    ig, fg = gates[..., :H], gates[..., H:]
+    log_f = jax.nn.log_sigmoid(fg)
+
+    m_new = jnp.maximum(log_f + state["m"], ig)                 # (B,H)
+    fs = jnp.exp(log_f + state["m"] - m_new)
+    is_ = jnp.exp(ig - m_new)
+    c = state["c"] * fs[..., None, None] + is_[..., None, None] \
+        * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = state["n"] * fs[..., None] + is_[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, dp).astype(x.dtype)
+    y = rms_norm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(gate)
+    return y @ p["w_down"].astype(x.dtype), \
+        {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_params(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 4)
+    ff = int(d * 4 / 3 / 64) * 64 * 2 or 2 * d
+    return {
+        # input projections for gates (z, i, f, o)
+        "w_x": dense_init(ks[0], (d, 4 * d), cfg.param_dtype),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "w_r": dense_init(ks[1], (H, hd, 4 * hd), cfg.param_dtype, fan_in=hd),
+        "bias": jnp.zeros((4 * d,), cfg.param_dtype),
+        "norm": jnp.ones((d,), cfg.param_dtype),
+        "norm_in": jnp.ones((d,), cfg.param_dtype),
+        "w_up": dense_init(ks[2], (d, ff), cfg.param_dtype),
+        "w_down": dense_init(ks[3], (ff // 2, d), cfg.param_dtype,
+                             fan_in=ff // 2),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p, xt, st, cfg: ModelConfig):
+    """One sLSTM time step.  xt: (B, 4*d) pre-projected input contribution."""
+    B = xt.shape[0]
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    rec = jnp.einsum("bhk,hkg->bhg", st["h"].astype(xt.dtype),
+                     p["w_r"].astype(xt.dtype))          # (B,H,4*hd)
+    tot = (xt.reshape(B, H, 4 * hd) + rec
+           + p["bias"].astype(xt.dtype).reshape(H, 4 * hd)).astype(jnp.float32)
+    z, i, f, o = jnp.split(tot, 4, axis=-1)              # each (B,H,hd)
+    log_f = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(log_f + st["m"], i)
+    fs = jnp.exp(log_f + st["m"] - m_new)
+    is_ = jnp.exp(i - m_new)
+    c = fs * st["c"] + is_ * jnp.tanh(z)
+    n = fs * st["n"] + is_
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  return_state: bool = False):
+    """Sequential sLSTM over time + gated FFN.  x: (B, S, d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    x = rms_norm(p["norm_in"], x, cfg.norm_eps)
+    xg = x @ p["w_x"].astype(x.dtype)                    # (B,S,4d)
+
+    def step(st, xt):
+        st2 = _slstm_cell(p, xt, st, cfg)
+        return st2, st2["h"]
+
+    st0 = slstm_init_state(cfg, B)
+    fin, hs = jax.lax.scan(step, st0, jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(p["norm"], y, cfg.norm_eps)
+    up = y @ p["w_up"].astype(x.dtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, fin
+    return out
+
+
+def slstm_decode(p: Params, x: jax.Array, state: Dict, cfg: ModelConfig):
+    B = x.shape[0]
+    x = rms_norm(p["norm_in"], x, cfg.norm_eps)
+    xg = (x @ p["w_x"].astype(x.dtype))[:, 0]
+    st2 = _slstm_cell(p, xg, state, cfg)
+    y = st2["h"].reshape(B, 1, cfg.d_model).astype(x.dtype)
+    y = rms_norm(p["norm"], y, cfg.norm_eps)
+    up = y @ p["w_up"].astype(x.dtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * b) @ p["w_down"].astype(x.dtype), st2

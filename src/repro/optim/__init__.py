@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .clipping import PipelinedClipState, pipelined_clip_init, pipelined_clip
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "PipelinedClipState", "pipelined_clip_init", "pipelined_clip"]

@@ -1,0 +1,99 @@
+"""Functional AdamW with optional 8-bit moment states.
+
+States are plain pytrees mirroring the parameter tree, so they shard with
+the same PartitionSpecs (ZeRO: optimizer state lives wherever the parameter
+shard lives).  ``state_dtype='i8'`` swaps both moments to blockwise int8
+(see eightbit.py) — used by the biggest assigned configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .eightbit import Q8, dequantize, quantize, zeros_like_q8
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "f32"       # f32 | bf16 | i8
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    mult = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, mult)
+
+
+def _zeros_state(p, cfg: AdamWConfig):
+    if cfg.state_dtype == "i8":
+        return zeros_like_q8(p)
+    dt = jnp.bfloat16 if cfg.state_dtype == "bf16" else jnp.float32
+    return jnp.zeros(p.shape, dt)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    return {
+        "m": jax.tree_util.tree_map(lambda p: _zeros_state(p, cfg), params),
+        "v": jax.tree_util.tree_map(lambda p: _zeros_state(p, cfg), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _load(s):
+    return dequantize(s) if isinstance(s, Q8) else s.astype(jnp.float32)
+
+
+def _store(x, like):
+    if isinstance(like, Q8):
+        return quantize(x)
+    return x.astype(like.dtype)
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 grad_scale: Optional[jax.Array] = None):
+    """One AdamW step.  ``grad_scale`` multiplies gradients (used by the
+    pipelined clipper).  Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    c1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        if grad_scale is not None:
+            g = g * grad_scale
+        mf = _load(m) * cfg.b1 + (1 - cfg.b1) * g
+        vf = _load(v) * cfg.b2 + (1 - cfg.b2) * g * g
+        mhat = mf / c1
+        vhat = vf / c2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), _store(mf, m), _store(vf, v)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}

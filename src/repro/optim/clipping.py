@@ -1,0 +1,46 @@
+"""Pipelined gradient-norm clipping — the paper's dependency-breaking idea
+applied to training (beyond-paper feature, DESIGN.md §4).
+
+Standard global-norm clipping puts the norm's all-reduce on the critical
+path between backward and the optimizer.  Like p-BiCGSafe's reduction
+(which consumes only last-iteration quantities), we clip step k with the
+*previous* step's global norm: the norm all-reduce of step k then has no
+consumer inside step k and overlaps with the optimizer/backward compute.
+One-step-stale clipping is a standard large-batch practice; the clip
+threshold changes slowly relative to one step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PipelinedClipState(NamedTuple):
+    prev_norm: jax.Array   # global grad norm from the previous step
+    initialized: jax.Array
+
+
+def pipelined_clip_init() -> PipelinedClipState:
+    return PipelinedClipState(jnp.ones((), jnp.float32),
+                              jnp.zeros((), bool))
+
+
+def global_norm(grads) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(grads)))
+
+
+def pipelined_clip(grads, state: PipelinedClipState, max_norm: float
+                   ) -> Tuple[jax.Array, PipelinedClipState]:
+    """Returns (grad_scale, new_state).
+
+    ``grad_scale`` is computed from state.prev_norm (stale by one step) so
+    this step's norm reduction is off the critical path.  The fresh norm is
+    returned in the new state for the next step.
+    """
+    fresh = global_norm(grads)              # all-reduce, no consumer here
+    eff = jnp.where(state.initialized, state.prev_norm, fresh)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(eff, 1e-9))
+    return scale, PipelinedClipState(fresh, jnp.ones((), bool))

@@ -1,0 +1,59 @@
+"""Blockwise 8-bit state quantization (Dettmers-style) for optimizer
+moments — a distributed-optimization memory trick: Adam m/v in int8 with
+fp32 per-block scales cuts optimizer state from 8 to ~2.06 bytes/param,
+which is what lets the 671B config fit 256 × 16 GB chips (EXPERIMENTS.md
+§Dry-run)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+class Q8(NamedTuple):
+    codes: jax.Array    # int8, original shape
+    scales: jax.Array   # fp32, (*shape[:-1], last_dim // bs)
+
+
+def _blocksize(x_shape) -> int:
+    if not x_shape:
+        return 1
+    last = x_shape[-1]
+    return BLOCK if last % BLOCK == 0 else last
+
+# Blocks run along the LAST dim so the scales tensor keeps the codes'
+# leading-dim sharding (the scales are 1/32 the codes' bytes and shard with
+# them — never replicated; that matters at 671B scale).
+
+
+def quantize(x: jax.Array) -> Q8:
+    if x.ndim == 0:
+        return Q8(jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8),
+                  jnp.ones((), jnp.float32))
+    bs = _blocksize(x.shape)
+    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], x.shape[-1] // bs, bs)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127
+                     ).astype(jnp.int8)
+    return Q8(codes.reshape(x.shape), scale)
+
+
+def dequantize(q: Q8) -> jax.Array:
+    if q.codes.ndim == 0:
+        return q.codes.astype(jnp.float32) * q.scales
+    bs = _blocksize(q.codes.shape)
+    xb = q.codes.astype(jnp.float32).reshape(
+        *q.codes.shape[:-1], q.codes.shape[-1] // bs, bs)
+    return (xb * q.scales[..., None]).reshape(q.codes.shape)
+
+
+def zeros_like_q8(x: jax.Array) -> Q8:
+    if x.ndim == 0:
+        return Q8(jnp.zeros((), jnp.int8), jnp.ones((), jnp.float32))
+    bs = _blocksize(x.shape)
+    return Q8(jnp.zeros(x.shape, jnp.int8),
+              jnp.ones((*x.shape[:-1], x.shape[-1] // bs), jnp.float32))

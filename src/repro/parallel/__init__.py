@@ -1,0 +1,5 @@
+from .sharding import (LogicalMesh, current_mesh, logical_constraint,
+                       param_spec, set_mesh, use_mesh)
+
+__all__ = ["LogicalMesh", "current_mesh", "logical_constraint",
+           "param_spec", "set_mesh", "use_mesh"]

@@ -1,0 +1,81 @@
+"""Parameter partitioning rules (path + shape -> PartitionSpec).
+
+Logical placement follows MaxText-style 2-D sharding: every weight is
+sharded on the TP axis ("model") along its parallel dim (heads / ff /
+experts / vocab) and on the FSDP axis ("data") along the other dim; the
+"pod" axis (multi-pod mesh) carries pure data parallelism, so parameters
+are *replicated* across pods and gradients reduce over ("pod","data").
+
+Axes that do not divide the dimension are dropped (e.g. whisper's vocab
+51865 on a 16-way axis) — correctness first, the dry-run memory report
+shows the cost.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+# trailing-dims logical layout per parameter name (last path segment)
+_TRAILING: dict = {
+    # name: tuple of logical names for the trailing dims
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "pos_embed": (None, "fsdp"),
+    # up-style projections (d -> parallel)
+    "wq": ("fsdp", "tensor"), "wk": ("fsdp", "tensor"),
+    "wv": ("fsdp", "tensor"), "wi": ("fsdp", "tensor"),
+    "wg": ("fsdp", "tensor"), "w_up": ("fsdp", "tensor"),
+    "w_x": ("fsdp", None), "w_in": ("fsdp", None),
+    "wdq": ("fsdp", "tensor"), "wuq": ("fsdp", "tensor"),
+    "wdkv": ("fsdp", None), "wuk": ("fsdp", "tensor"),
+    "wuv": ("fsdp", "tensor"),
+    "shared_wi": ("fsdp", "tensor"), "shared_wg": ("fsdp", "tensor"),
+    "w_if": ("fsdp", None),
+    "mtp_proj": ("fsdp", "tensor"),
+    # down-style projections (parallel -> d)
+    "wo": ("tensor", "fsdp"), "w_down": ("tensor", "fsdp"),
+    "w_out": ("tensor", "fsdp"), "shared_wo": ("tensor", "fsdp"),
+    # router
+    "router": ("fsdp", None), "router_bias": (None,),
+    # everything else (norms, biases, convs, gates): replicated
+}
+
+# MoE expert tensors (path contains "/moe"): trailing 3 dims
+_MOE_TRAILING = {
+    "wi": ("experts", "fsdp", None),
+    "wg": ("experts", "fsdp", None),
+    "wo": ("experts", None, "fsdp"),
+}
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], lm) -> P:
+    name = path.split("/")[-1]
+    if "moe" in path and name in _MOE_TRAILING:
+        logical = _MOE_TRAILING[name]
+    else:
+        logical = _TRAILING.get(name, ())
+
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    # align logical names to the trailing dims (leading dims: layer stack)
+    off = ndim - len(logical)
+    for i, lname in enumerate(logical):
+        if lname is None or off + i < 0:
+            continue
+        dim = shape[off + i]
+        axes = lm.axes_for(lname)
+        if axes is None:
+            continue
+        n = lm.size(lname)
+        if dim % max(n, 1) == 0 and dim >= n:
+            spec[off + i] = axes
+    return P(*spec)
+
+
+def tree_param_specs(params, lm, prefix: str = ""):
+    """Map a param pytree (nested dicts) to a matching tree of specs."""
+    if isinstance(params, dict):
+        return {k: tree_param_specs(v, lm, f"{prefix}/{k}")
+                for k, v in params.items()}
+    return spec_for_param(prefix, params.shape, lm)

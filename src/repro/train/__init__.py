@@ -1,0 +1,6 @@
+from .checkpoint import (CheckpointManager, latest_step, restore_pytree,
+                         save_pytree)
+from .train_loop import TrainConfig, train
+
+__all__ = ["CheckpointManager", "latest_step", "restore_pytree",
+           "save_pytree", "TrainConfig", "train"]

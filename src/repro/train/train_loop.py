@@ -1,0 +1,148 @@
+"""Training loop: mesh-aware, fault-tolerant, restartable.
+
+One jitted step fuses: loss+grad -> pipelined grad-norm clip (stale norm,
+off the critical path — DESIGN.md §4) -> in-graph bad-step gate (non-finite
+or spiking grads leave params/opt untouched) -> AdamW update.  The loop
+around it owns checkpoints (atomic, async), restart-on-failure, straggler
+timing, and the stateless data pipeline (step index = iterator state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, make_dataset
+from repro.models import ModelConfig, init_params, loss_fn
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         pipelined_clip, pipelined_clip_init)
+from repro.optim.clipping import global_norm
+from repro.parallel import LogicalMesh, use_mesh
+from repro.parallel.param_rules import tree_param_specs
+
+from .checkpoint import CheckpointManager
+from .fault_tolerance import BadStepFilter, FailureInjector, StepTimer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep_ckpts: int = 3
+    max_grad_norm: float = 1.0
+    spike_factor: float = 50.0
+    seed: int = 0
+    resume: bool = True
+    opt: AdamWConfig = AdamWConfig()
+
+
+def make_train_step(model_cfg: ModelConfig, tcfg: TrainConfig,
+                    lm: Optional[LogicalMesh] = None):
+    """Returns the jitted fused step:
+    (params, opt, clip, batch, spike_thresh) -> (params, opt, clip, metrics)
+    """
+
+    def step_fn(params, opt_state, clip_state, batch, spike_thresh):
+        with use_mesh(lm):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, model_cfg, batch)
+            scale, clip_state2 = pipelined_clip(grads, clip_state,
+                                                tcfg.max_grad_norm)
+            gnorm = clip_state2.prev_norm
+            new_params, new_opt = adamw_update(params, grads, opt_state,
+                                               tcfg.opt, grad_scale=scale)
+            # in-graph bad-step gate: non-finite loss/grads or a spike
+            # leaves params, opt and clip state untouched
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm) \
+                & (gnorm < spike_thresh)
+            sel = lambda a, b: jax.tree_util.tree_map(
+                lambda x, y: jnp.where(ok, x, y), a, b)
+            params = sel(new_params, params)
+            opt_state = sel(new_opt, opt_state)
+            clip_state = sel(clip_state2, clip_state)
+        metrics = dict(metrics)
+        metrics.update(grad_norm=gnorm, accepted=ok.astype(jnp.float32))
+        return params, opt_state, clip_state, metrics
+
+    donate = (0, 1, 2)
+    if lm is None:
+        return jax.jit(step_fn, donate_argnums=donate)
+    params_sds = jax.eval_shape(
+        lambda: init_params(model_cfg, jax.random.PRNGKey(tcfg.seed)))
+    pspecs = tree_param_specs(params_sds, lm)
+    psh = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(lm.mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return jax.jit(step_fn, donate_argnums=donate,
+                   in_shardings=(psh, None, None, None, None),
+                   out_shardings=(psh, None, None, None))
+
+
+def train(model_cfg: ModelConfig, data_cfg: DataConfig, tcfg: TrainConfig,
+          lm: Optional[LogicalMesh] = None,
+          injector: Optional[FailureInjector] = None,
+          callback: Optional[Callable[[int, Dict], None]] = None
+          ) -> Dict[str, Any]:
+    """Run (or resume) training.  Returns summary + metric history."""
+    ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+    step_fn = make_train_step(model_cfg, tcfg, lm)
+    batch_fn = make_dataset(data_cfg, model_cfg)
+
+    params = init_params(model_cfg, jax.random.PRNGKey(tcfg.seed))
+    opt_state = adamw_init(params, tcfg.opt)
+    clip_state = pipelined_clip_init()
+    start_step = 0
+    if tcfg.resume and ckpt.latest_step() is not None:
+        state_tpl = {"params": params, "opt": opt_state, "clip": clip_state}
+        state, start_step = ckpt.restore(state_tpl)
+        params, opt_state, clip_state = (state["params"], state["opt"],
+                                         state["clip"])
+
+    bad_filter = BadStepFilter(nan_zap=tcfg.spike_factor)
+    timer = StepTimer()
+    history: List[Dict[str, float]] = []
+
+    step = start_step
+    while step < tcfg.steps:
+        if injector is not None:
+            injector.check(step)
+        timer.start()
+        batch = {k: jnp.asarray(v) for k, v in batch_fn(step).items()}
+        norms = list(bad_filter.norms) or [1e9]
+        spike = jnp.asarray(tcfg.spike_factor * float(np.median(norms)),
+                            jnp.float32)
+        params, opt_state, clip_state, metrics = step_fn(
+            params, opt_state, clip_state, batch, spike)
+        loss = float(metrics["loss"])
+        gnorm = float(metrics["grad_norm"])
+        accepted = bool(metrics["accepted"] > 0)
+        if accepted:
+            bad_filter.accept(loss, gnorm)   # updates running stats
+        else:
+            bad_filter.rejected += 1
+        dt = timer.stop(step)
+        rec = {"step": step, "loss": loss, "grad_norm": gnorm,
+               "accepted": accepted, "time_s": dt}
+        history.append(rec)
+        if callback:
+            callback(step, rec)
+        step += 1
+        if step % tcfg.ckpt_every == 0 or step == tcfg.steps:
+            ckpt.save({"params": params, "opt": opt_state,
+                       "clip": clip_state}, step)
+    ckpt.wait()
+    return {
+        "params": params,
+        "final_loss": history[-1]["loss"] if history else float("nan"),
+        "history": history,
+        "start_step": start_step,
+        "rejected_steps": bad_filter.rejected,
+        "straggler_stats": timer.stats(),
+    }

@@ -1,0 +1,60 @@
+"""Multi-device solver checks — run in a subprocess with 8 fake devices.
+
+Invoked by tests/test_distributed.py.  Exits nonzero on any failure.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (SolverConfig, bicgstab_solve, gpbicg_solve,  # noqa: E402
+                        pbicgsafe_rr_solve, pbicgsafe_solve, pbicgstab_solve,
+                        ssbicgsafe2_solve)
+from repro.core import matrices as M  # noqa: E402
+from repro.core.distributed import distributed_stencil_solve  # noqa: E402
+
+
+def check(mesh_shape, axis_names, solver, op, b_grid, ref_iters, xt):
+    mesh = jax.make_mesh(mesh_shape, axis_names)
+    res = distributed_stencil_solve(solver, op, b_grid, mesh,
+                                    config=SolverConfig(tol=1e-8))
+    it = int(res.iterations)
+    assert bool(res.converged), f"{axis_names}: not converged"
+    err = float(jnp.linalg.norm(res.x.reshape(-1) - xt) / jnp.linalg.norm(xt))
+    assert err < 1e-6, f"{axis_names}: err {err}"
+    # Same math => same iteration count modulo rounding: sharded partial
+    # sums reduce in a different order than a single global sum, which can
+    # shift the stopping iteration by a few when relres hovers at tol.
+    assert abs(it - ref_iters) <= max(3, int(0.2 * ref_iters)), \
+        f"{axis_names}: iters {it} vs {ref_iters}"
+    print(f"  ok mesh={mesh_shape} axes={axis_names} "
+          f"solver={solver.__module__.split('.')[-1]} iters={it} err={err:.1e}")
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    op, b, xt = M.convection_diffusion(16, peclet=1.0)
+    b_grid = b.reshape(16, 16, 16)
+
+    solvers = [pbicgsafe_solve, ssbicgsafe2_solve, bicgstab_solve,
+               pbicgstab_solve, gpbicg_solve, pbicgsafe_rr_solve]
+    refs = {s: int(s(op.matvec, b, config=SolverConfig(tol=1e-8)).iterations)
+            for s in solvers}
+
+    # 1-axis ring, 2-axis (data, model), 3-axis (pod, data, model)
+    for mesh_shape, axes in [((8,), ("rows",)),
+                             ((4, 2), ("data", "model")),
+                             ((2, 2, 2), ("pod", "data", "model"))]:
+        for s in solvers:
+            check(mesh_shape, axes, s, op, b_grid, refs[s], xt)
+    print("ALL DISTRIBUTED CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

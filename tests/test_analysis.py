@@ -1,0 +1,123 @@
+"""Tests for the HLO analysis + analytic flop counting machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.flops import count_fn, count_jaxpr
+from repro.launch.hlo_analysis import (HloGraph, collective_stats,
+                                       split_computations)
+
+HLO_SNIPPET = """
+HloModule test
+
+%region_0.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+%body.2 (p: (f32[128], f32[16])) -> (f32[128], f32[16]) {
+  %p = (f32[128], f32[16]) parameter(0)
+  %x = f32[128] get-tuple-element(%p), index=0
+  %ar = f32[16]{0} all-reduce(%x2), replica_groups={{0,1,2,3}}, to_apply=%region_0.1
+  %cp = f32[128]{0} collective-permute(%x), source_target_pairs={{0,1},{1,2}}
+  ROOT %t = (f32[128], f32[16]) tuple(%cp, %ar)
+}
+
+ENTRY %main (arg: f32[128]) -> f32[128] {
+  %arg = f32[128] parameter(0)
+  %ag = f32[512]{0} all-gather(%arg), replica_groups={{0,1,2,3}}, dimensions={0}
+  %w = (f32[128], f32[16]) while(%init), condition=%cond.3, body=%body.2
+  ROOT %out = f32[128] get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_collective_stats_basic():
+    cs = collective_stats(HLO_SNIPPET, n_devices=4)
+    assert cs.counts["all-reduce"] == 1
+    assert cs.counts["collective-permute"] == 1
+    assert cs.counts["all-gather"] == 1
+    # all-reduce of 16 f32 over group of 4: 2 * 64B * 3/4
+    assert cs.wire_bytes["all-reduce"] == pytest.approx(2 * 64 * 3 / 4)
+    # all-gather result 512 f32 = 2048B * 3/4
+    assert cs.wire_bytes["all-gather"] == pytest.approx(2048 * 3 / 4)
+    assert cs.wire_bytes["collective-permute"] == pytest.approx(512)
+
+
+def test_collective_stats_while_multiplier():
+    cs1 = collective_stats(HLO_SNIPPET, n_devices=4)
+    cs8 = collective_stats(HLO_SNIPPET, n_devices=4,
+                           while_body_multiplier=8)
+    # body collectives x8; entry all-gather unchanged
+    assert cs8.counts["all-reduce"] == 8
+    assert cs8.counts["all-gather"] == 1
+    assert cs8.wire_bytes["all-reduce"] == \
+        pytest.approx(8 * cs1.wire_bytes["all-reduce"])
+
+
+def test_split_computations():
+    comps = split_computations(HLO_SNIPPET)
+    assert set(comps) == {"region_0.1", "body.2", "main"}
+    assert "all-reduce" in comps["body.2"]
+    assert "all-gather" in comps["main"]
+
+
+def test_hlo_graph_dependencies():
+    g = HloGraph(split_computations(HLO_SNIPPET)["body.2"])
+    assert "ar" in g.ops and "cp" in g.ops
+    # cp consumes %x, ar consumes %x2 (undefined here -> no edge): independent
+    assert g.independent("ar", "cp")
+
+
+def test_count_single_matmul():
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    c = count_fn(lambda a, b: a @ b, x, w)
+    assert c["flops"] == pytest.approx(2 * 32 * 64 * 128)
+    assert c["dot_bytes"] == pytest.approx(4 * (32 * 64 + 64 * 128
+                                                + 32 * 128))
+
+
+def test_count_scan_multiplies():
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((10, 16, 16), jnp.float32)
+
+    def f(x, w):
+        return jax.lax.scan(lambda c, ww: (c @ ww, None), x, w)[0]
+
+    c = count_fn(f, x, w)
+    assert c["flops"] == pytest.approx(10 * 2 * 16 * 16 * 16)
+
+
+def test_count_through_jit_and_remat():
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+
+    @jax.jit
+    def f(a):
+        g = jax.checkpoint(lambda y: y @ y)
+        return g(a).sum()
+
+    c = count_fn(lambda a: jax.grad(lambda b: f(b))(a), x)
+    # fwd matmul + remat recompute + 2 bwd matmuls >= 3 matmuls
+    assert c["flops"] >= 3 * 2 * 8 ** 3
+
+
+def test_count_model_flops_close_to_6nd():
+    """Analytic count vs 6*N*D napkin math on a small dense config."""
+    from repro.configs import smoke_config
+    from repro.models import init_params, loss_fn
+    cfg = smoke_config("phi3-mini-3.8b").replace(
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_ff=512,
+        vocab_size=512, remat="full")
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 128), jnp.int32)}
+    c = count_fn(lambda p, b: jax.value_and_grad(
+        lambda pp: loss_fn(pp, cfg, b)[0])(p), params, batch)
+    n_params = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(
+        params))
+    tokens = 4 * 128
+    # full remat: ~8*N*D (2 fwd + 4 bwd + 2 recompute); embeddings skew small
+    ratio = c["flops"] / (8 * n_params * tokens)
+    assert 0.5 < ratio < 3.0, ratio

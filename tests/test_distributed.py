@@ -1,0 +1,28 @@
+"""Distributed-runtime tests.
+
+The main process must keep seeing exactly one CPU device (smoke tests +
+benches), so multi-device checks run in a subprocess that sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before importing jax.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, os.pardir, "src"))
+
+
+@pytest.mark.slow
+def test_distributed_solvers_all_meshes():
+    """All 6 solvers × {1,2,3}-axis meshes reproduce the reference solve."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # the script sets its own
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_distributed_check.py")],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) for solver invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (SolverConfig, pbicgsafe_solve, pbicgstab_solve,
+                        ssbicgsafe2_solve)
+from repro.core import matrices as M
+from repro.core.linear_operator import (CSROperator, DenseOperator,
+                                        ELLOperator)
+
+SETTINGS = dict(max_examples=12, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(24, 120), seed=st.integers(0, 2**16),
+       dominance=st.floats(1.05, 2.0))
+def test_pbicgsafe_solves_diag_dominant(n, seed, dominance):
+    """Any row-diagonally-dominant system is solved to tolerance."""
+    with jax.enable_x64(True):
+        op, b, xt = M.random_nonsym(n, min(6, n // 4 + 2), seed=seed,
+                                    diag_dominance=dominance)
+        res = pbicgsafe_solve(op.matvec, b,
+                              config=SolverConfig(tol=1e-8, maxiter=2000))
+        assert bool(res.converged) and not bool(res.breakdown)
+        true_res = float(jnp.linalg.norm(b - op.matvec(res.x))
+                         / jnp.linalg.norm(b))
+        assert true_res < 1e-6
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(16, 96), seed=st.integers(0, 2**16))
+def test_pipelined_equals_baseline_iterations(n, seed):
+    """Invariant: p-BiCGSafe and ssBiCGSafe2 take the same iteration count
+    (±1 for round-off at the stopping boundary) on well-conditioned systems."""
+    with jax.enable_x64(True):
+        op, b, _ = M.random_nonsym(n, 5, seed=seed, diag_dominance=1.5)
+        cfg = SolverConfig(tol=1e-8, maxiter=1000)
+        i1 = int(ssbicgsafe2_solve(op.matvec, b, config=cfg).iterations)
+        i2 = int(pbicgsafe_solve(op.matvec, b, config=cfg).iterations)
+        assert abs(i1 - i2) <= 1
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(16, 80), seed=st.integers(0, 2**16))
+def test_ell_csr_matvec_agree(n, seed):
+    """Format invariance: ELL and CSR encode the same matrix."""
+    with jax.enable_x64(True):
+        op_csr, b, _ = M.random_nonsym(n, 5, seed=seed)
+        op_ell = ELLOperator.from_csr(op_csr)
+        x = jnp.asarray(np.random.default_rng(seed).standard_normal(n))
+        np.testing.assert_allclose(np.asarray(op_csr.matvec(x)),
+                                   np.asarray(op_ell.matvec(x)),
+                                   rtol=1e-12, atol=1e-12)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), shift=st.floats(-0.3, 0.3))
+def test_solution_invariant_under_x0(seed, shift):
+    """The converged solution does not depend on the initial guess."""
+    with jax.enable_x64(True):
+        op, b, xt = M.random_nonsym(64, 5, seed=seed, diag_dominance=1.4)
+        x0 = jnp.full_like(b, shift)
+        r1 = pbicgsafe_solve(op.matvec, b, config=SolverConfig())
+        r2 = pbicgsafe_solve(op.matvec, b, x0, config=SolverConfig())
+        assert bool(r1.converged) and bool(r2.converged)
+        np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
+                                   rtol=1e-5, atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(24, 96), seed=st.integers(0, 2**16))
+def test_residual_history_monotone_envelope(n, seed):
+    """The min-so-far envelope of the residual history is non-increasing
+    and ends below tol (smooth convergence claim for the Safe family)."""
+    with jax.enable_x64(True):
+        op, b, _ = M.random_nonsym(n, 5, seed=seed, diag_dominance=1.5)
+        cfg = SolverConfig(tol=1e-8, maxiter=1000, record_history=True)
+        res = pbicgsafe_solve(op.matvec, b, config=cfg)
+        assert bool(res.converged)
+        h = np.asarray(res.residual_history)[:int(res.iterations) + 1]
+        env = np.minimum.accumulate(h)
+        assert env[-1] <= 1e-8
+        assert (np.diff(env) <= 0).all()

@@ -1,0 +1,268 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, train loop,
+fault tolerance, serving engine, Newton-Krylov."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import DataConfig, make_dataset, synthetic_token_stream
+from repro.models import init_params, loss_fn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.eightbit import dequantize, quantize
+from repro.train import CheckpointManager, TrainConfig, train
+from repro.train.fault_tolerance import (BadStepFilter, FailureInjector,
+                                         run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_shard_disjoint():
+    cfg = DataConfig(batch_size=4, seq_len=64, vocab_size=128, seed=7)
+    a = synthetic_token_stream(cfg, 3)
+    b = synthetic_token_stream(cfg, 3)
+    np.testing.assert_array_equal(a, b)
+    c = synthetic_token_stream(
+        DataConfig(batch_size=4, seq_len=64, vocab_size=128, seed=7,
+                   shard_index=1, shard_count=2), 3)
+    assert not np.array_equal(a, c)
+    assert a.min() >= 0 and a.max() < 128
+
+
+def test_file_source(tmp_path):
+    p = tmp_path / "corpus.txt"
+    p.write_text("hello world, this is a test corpus for the pipeline. " * 50)
+    cfg = DataConfig(batch_size=2, seq_len=32, vocab_size=256,
+                     source="file", path=str(p))
+    fn = make_dataset(cfg)
+    b0, b1 = fn(0), fn(1)
+    assert b0["tokens"].shape == (2, 32)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# 8-bit state + AdamW
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (128,), (3, 256), (5, 130)])
+def test_q8_roundtrip(shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 3.0
+    q = quantize(x)
+    err = jnp.abs(dequantize(q) - x).max() / (jnp.abs(x).max() + 1e-9)
+    assert float(err) < 1.5 / 127
+
+
+@pytest.mark.parametrize("state_dtype", ["f32", "i8"])
+def test_adamw_reduces_quadratic(state_dtype):
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, state_dtype=state_dtype,
+                      warmup_steps=1, decay_steps=1000)
+    params = {"w": jnp.array([2.0, -3.0, 1.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((3, 2), jnp.bfloat16)}}
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for step in (10, 20, 30):
+        mgr.save(tree, step, blocking=True)
+    assert mgr.latest_step() == 30
+    # retention: only last 2 kept
+    assert sorted(int(p.stem.split("_")[1])
+                  for p in tmp_path.glob("step_*.npz")) == [20, 30]
+    restored, step = mgr.restore(tree)
+    assert step == 30
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# train loop + fault tolerance
+# ---------------------------------------------------------------------------
+
+def _tiny_train_cfg(tmp_path, steps=30, **kw):
+    return TrainConfig(
+        steps=steps, ckpt_every=10, ckpt_dir=str(tmp_path / "ckpt"),
+        log_every=100,
+        opt=AdamWConfig(lr=3e-3, warmup_steps=2, decay_steps=steps), **kw)
+
+
+def test_train_loss_decreases(tmp_path):
+    cfg = smoke_config("phi3-mini-3.8b")
+    dcfg = DataConfig(batch_size=4, seq_len=64, vocab_size=cfg.vocab_size)
+    out = train(cfg, dcfg, _tiny_train_cfg(tmp_path, steps=30))
+    first = np.mean([h["loss"] for h in out["history"][:5]])
+    last = np.mean([h["loss"] for h in out["history"][-5:]])
+    assert last < first - 0.2, (first, last)
+
+
+def test_train_restart_resumes_and_matches(tmp_path):
+    """Kill at step 17 -> restart -> final state equals uninterrupted run."""
+    cfg = smoke_config("xlstm-350m")
+    dcfg = DataConfig(batch_size=2, seq_len=32, vocab_size=cfg.vocab_size)
+
+    ref = train(cfg, dcfg, _tiny_train_cfg(tmp_path / "ref", steps=25))
+
+    inj = FailureInjector(fail_at=[17])
+
+    def attempt():
+        return train(cfg, dcfg, _tiny_train_cfg(tmp_path / "ft", steps=25),
+                     injector=inj)
+
+    out = run_with_restarts(attempt, max_restarts=2)
+    assert out["restarts"] == 1
+    assert out["start_step"] == 10            # resumed from the step-10 ckpt
+    ra, rb = ref["params"], out["params"]
+    for a, b in zip(jax.tree_util.tree_leaves(ra),
+                    jax.tree_util.tree_leaves(rb)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_bad_step_filter():
+    f = BadStepFilter(nan_zap=10.0, max_bad=2)
+    for _ in range(10):
+        assert f.accept(1.0, 1.0)
+    assert not f.accept(float("nan"), 1.0)
+    assert not f.accept(1.0, 1e9)
+    with pytest.raises(RuntimeError):
+        f.accept(float("inf"), 1.0)
+
+
+def test_in_graph_bad_step_gate(tmp_path):
+    """A poisoned batch (loss=NaN via synthetic inf logits is hard to force;
+    instead force a spike threshold of 0 so every step is rejected) leaves
+    params bit-identical."""
+    from repro.train.train_loop import make_train_step
+    cfg = smoke_config("xlstm-350m")
+    tcfg = _tiny_train_cfg(tmp_path, steps=1)
+    step_fn = make_train_step(cfg, tcfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    from repro.optim import adamw_init, pipelined_clip_init
+    opt = adamw_init(params, tcfg.opt)
+    clip = pipelined_clip_init()
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+    p0 = jax.tree_util.tree_map(lambda x: np.asarray(x).copy(), params)
+    params2, *_ , metrics = step_fn(params, opt, clip, batch,
+                                    jnp.asarray(0.0, jnp.float32))
+    assert float(metrics["accepted"]) == 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(p0),
+                    jax.tree_util.tree_leaves(params2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_serving_engine_batches_and_decodes():
+    from repro.serve import Request, ServeConfig, ServingEngine
+    cfg = smoke_config("qwen3-8b")
+    eng = ServingEngine(cfg, ServeConfig(max_batch=3, max_len=64))
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        plen = 8 if i < 3 else 12
+        eng.submit(Request(prompt=list(rng.integers(1, 200, plen)),
+                           max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.output) == 6
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+
+
+def test_serving_matches_teacher_forcing():
+    """Engine greedy decode == argmax of teacher-forced forward."""
+    from repro.models import forward
+    from repro.serve import Request, ServeConfig, ServingEngine
+    cfg = smoke_config("phi3-mini-3.8b")
+    eng = ServingEngine(cfg, ServeConfig(max_batch=1, max_len=64))
+    prompt = list(range(1, 11))
+    eng.submit(Request(prompt=prompt, max_new_tokens=4))
+    done = eng.run()
+    out = done[0].output
+
+    toks = list(prompt)
+    for i in range(4):
+        logits, _ = forward(eng.params, cfg,
+                            {"tokens": jnp.asarray([toks], jnp.int32)})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        assert nxt == out[i], (i, nxt, out)
+        toks.append(nxt)
+
+
+# ---------------------------------------------------------------------------
+# Newton-Krylov (paper's solver inside the optimizer)
+# ---------------------------------------------------------------------------
+
+def test_newton_krylov_step_reduces_loss():
+    from repro.optim.newton_krylov import (NewtonKrylovConfig,
+                                           newton_krylov_step)
+    with jax.enable_x64(True):
+        # tiny softmax-regression "LM": logits = x @ W
+        key = jax.random.PRNGKey(0)
+        X = jax.random.normal(key, (64, 8), jnp.float64)
+        ytrue = jax.random.randint(jax.random.PRNGKey(1), (64,), 0, 5)
+        params = {"w": jnp.zeros((8, 5), jnp.float64)}
+
+        def logits_fn(p, batch):
+            return batch["x"] @ p["w"]
+
+        def lossf(p, batch):
+            lg = logits_fn(p, batch)
+            return -jnp.mean(jax.nn.log_softmax(lg)[
+                jnp.arange(lg.shape[0]), batch["y"]])
+
+        batch = {"x": X, "y": ytrue}
+        cfg = NewtonKrylovConfig(damping=1e-2, inner_maxiter=50,
+                                 inner_tol=1e-8, trust_radius=10.0)
+        losses = [float(lossf(params, batch))]
+        m1 = None
+        for _ in range(5):
+            params, m1 = newton_krylov_step(lossf, logits_fn, params,
+                                            batch, cfg)
+            losses.append(float(lossf(params, batch)))
+        # monotone (line-searched) + substantial progress toward the
+        # problem's CE floor (~1.28 for this random dataset)
+        assert all(b <= a + 1e-12 for a, b in zip(losses, losses[1:]))
+        assert losses[-1] < losses[0] - 0.25
+        assert int(m1["inner_iters"]) > 0
+
+
+def test_newton_krylov_on_model():
+    """GGN + p-BiCGSafe step on a real (tiny) transformer reduces loss."""
+    from repro.models import forward
+    from repro.optim.newton_krylov import (NewtonKrylovConfig,
+                                           newton_krylov_step)
+    cfg = smoke_config("phi3-mini-3.8b").replace(
+        n_layers=1, dtype=jnp.float32, param_dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+
+    def logits_fn(p, b):
+        return forward(p, cfg, b)[0]
+
+    def lossf(p, b):
+        return loss_fn(p, cfg, b)[0]
+
+    nk = NewtonKrylovConfig(damping=1e-2, inner_maxiter=10, inner_tol=1e-2,
+                            lr=0.5)
+    l0 = float(lossf(params, batch))
+    p1, m = newton_krylov_step(lossf, logits_fn, params, batch, nk)
+    l1 = float(lossf(p1, batch))
+    assert np.isfinite(l1)
+    assert l1 < l0

@@ -56,8 +56,8 @@ def analyze(solver, op, b_grid, mesh):
 def main():
     op, b, _ = M.convection_diffusion(16, peclet=1.0)
     b_grid = b.reshape(16, 16, 16)
-    mesh = jax.make_mesh((8,), ("rows",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((8,), ("rows",))
     out = {
         "p-bicgsafe": analyze(pbicgsafe_solve, op, b_grid, mesh),
         "ssbicgsafe2": analyze(ssbicgsafe2_solve, op, b_grid, mesh),

@@ -1,0 +1,105 @@
+"""Batched multi-RHS vs. looped single-RHS solves (Krasnopolsky regime).
+
+Measures wall-clock for solving A X = B with m right-hand sides two ways:
+
+* looped  — m independent ``pbicgsafe_solve`` calls (m reductions + m HBM
+            vector passes per "iteration row"),
+* batched — one ``solve_batched`` call: (n, m) block vectors, ONE (9, m)
+            fused reduction per iteration regardless of m.
+
+Also asserts the communication claim structurally: a ``SyncCounter`` traces
+the batched solve and must see exactly 1 ``dot_reduce`` in the iteration
+body (+1 init) for any m — the batched path keeps the paper's single
+synchronization phase while amortizing it over all right-hand sides.
+
+  PYTHONPATH=src python -m benchmarks.run --only multirhs
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import fmt_table, write_json
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _problem(nx: int):
+    from repro.core import matrices as M
+    return M.convection_diffusion(nx, peclet=1.0)
+
+
+def _rhs_block(b, m: int):
+    keys = jax.random.split(jax.random.PRNGKey(7), m)
+    cols = [b] + [jax.random.normal(k, b.shape, b.dtype) for k in keys[1:]]
+    return jnp.stack(cols, axis=1)
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()                                     # compile / warm up
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def assert_single_reduction(op, B, config) -> int:
+    """Trace solve_batched and return dot_reduce calls in one iteration."""
+    from repro.core import solve_batched
+    from repro.core._common import SyncCounter
+    from repro.core.types import identity_reduce
+
+    counter = SyncCounter(identity_reduce)
+    jax.make_jaxpr(lambda bb: solve_batched(
+        op.matvec, bb, config=config, dot_reduce=counter))(B)
+    per_iter = counter.calls - 1             # minus the ||r_0|| init reduce
+    assert per_iter == 1, (
+        f"batched path must fuse to 1 reduction/iter, traced {per_iter}")
+    return per_iter
+
+
+def run(quick: bool = False):
+    from repro.core import SolverConfig, pbicgsafe_solve, solve_batched
+
+    print("\n== bench_multirhs (batched vs looped multi-RHS solves) ==")
+    nx = 10 if quick else 16
+    op, b, _ = _problem(nx)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+
+    rows = []
+    for m in ((2, 8) if quick else (2, 8, 32)):
+        B = _rhs_block(b, m)
+        per_iter = assert_single_reduction(op, B, cfg)
+
+        looped = jax.jit(lambda BB: [
+            pbicgsafe_solve(op.matvec, BB[:, j], config=cfg).x
+            for j in range(m)])
+        batched = jax.jit(lambda BB: solve_batched(op.matvec, BB,
+                                                   config=cfg))
+
+        t_loop = _time(lambda: jax.block_until_ready(looped(B)))
+        res = batched(B)
+        assert bool(np.asarray(res.converged).all()), "batched must converge"
+        t_batch = _time(lambda: jax.block_until_ready(batched(B).x))
+        iters = np.asarray(res.iterations)
+        rows.append([op.n, m, int(iters.max()), f"{t_loop*1e3:.1f}",
+                     f"{t_batch*1e3:.1f}", f"{t_loop/t_batch:.2f}",
+                     per_iter])
+
+    headers = ["n", "m", "max iters", "looped ms", "batched ms",
+               "speedup", "reduce/iter"]
+    print(fmt_table(rows, headers))
+    print("batched path: one (9, m) fused reduction per iteration "
+          "(asserted at trace time)")
+    write_json("bench_multirhs.json",
+               {"headers": headers, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@
   bench_overlap       §3 Fig 3.1 + Fig 5.3 (HLO overlap proof + model)
   bench_scaling       Fig 5.3 companion    (measured per-iter work)
   bench_roofline      §Roofline            (terms from dry-run artifacts)
+  bench_multirhs      multi-RHS            (batched vs looped solves)
 
 Artifacts land in experiments/*.json; stdout is the human summary.
 """
@@ -27,8 +28,8 @@ def main() -> None:
                     help="comma-separated subset of bench names")
     args = ap.parse_args()
 
-    from . import (bench_convergence, bench_cost, bench_overlap, bench_rr,
-                   bench_roofline, bench_scaling)
+    from . import (bench_convergence, bench_cost, bench_multirhs,
+                   bench_overlap, bench_roofline, bench_rr, bench_scaling)
 
     benches = {
         "convergence": bench_convergence.run,
@@ -37,6 +38,7 @@ def main() -> None:
         "overlap": bench_overlap.run,
         "scaling": bench_scaling.run,
         "roofline": bench_roofline.run,
+        "multirhs": bench_multirhs.run,
     }
     if args.only:
         keep = set(args.only.split(","))

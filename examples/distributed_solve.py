@@ -33,8 +33,8 @@ def main():
     op, b, xt = M.convection_diffusion(n, peclet=1.0)
     print(f"convection-diffusion, {n}^3 = {n**3:,} unknowns, "
           f"{jax.device_count()} devices, mesh (4, 2) = (data, model)")
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     b_grid = b.reshape(n, n, n)
     for name in ("p-bicgsafe", "ssbicgsafe2", "bicgstab", "p-bicgstab"):
         t0 = time.perf_counter()

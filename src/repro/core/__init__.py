@@ -12,17 +12,25 @@ Public API:
 * Operators: Dense/CSR/ELL/Stencil7 + Jacobi preconditioner.
 * Problem generators: :mod:`repro.core.matrices`.
 * Distributed driver: :mod:`repro.core.distributed`.
+* Compute substrates: every solver takes ``substrate="jnp"|"pallas"``
+  (:mod:`repro.core.substrate`) selecting who computes the fused dot /
+  vector-update / SpMV phases of the hot loop.
+* Multi-RHS: :func:`solve_batched` solves ``A X = B`` for ``(n, m)``
+  right-hand sides with per-RHS convergence, one reduction per iteration.
 """
 from .types import SolveResult, SolverConfig, identity_reduce
 from .linear_operator import (CSROperator, DenseOperator, ELLOperator,
                               JacobiPreconditioner, Stencil7Operator,
                               as_matvec, preconditioned_matvec)
+from .substrate import (SUBSTRATES, JnpSubstrate, PallasSubstrate, Substrate,
+                        get_substrate)
 from .bicgstab import bicgstab_solve
 from .cgs import cgs_solve
 from .pipelined_bicgstab import pbicgstab_solve
 from .gpbicg import gpbicg_solve
 from .ssbicgsafe import ssbicgsafe2_solve
 from .pipelined_bicgsafe import pbicgsafe_solve, pbicgsafe_rr_solve
+from .multirhs import solve_batched
 
 SOLVERS = {
     "bicgstab": bicgstab_solve,
@@ -38,7 +46,10 @@ __all__ = [
     "SolveResult", "SolverConfig", "identity_reduce",
     "CSROperator", "DenseOperator", "ELLOperator", "JacobiPreconditioner",
     "Stencil7Operator", "as_matvec", "preconditioned_matvec",
+    "Substrate", "JnpSubstrate", "PallasSubstrate", "SUBSTRATES",
+    "get_substrate",
     "bicgstab_solve", "pbicgstab_solve", "gpbicg_solve",
     "ssbicgsafe2_solve", "pbicgsafe_solve", "pbicgsafe_rr_solve",
+    "solve_batched",
     "SOLVERS",
 ]

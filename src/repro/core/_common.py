@@ -9,6 +9,20 @@ reduction per phase, which is the paper's communication model.  The number
 of ``dot_reduce`` calls per iteration therefore *is* the solver's
 synchronization count (1 for ssBiCGSafe2/p-BiCGSafe, 2 for BiCGStab and
 p-BiCGStab, 3 for GPBi-CG), and tests assert it.
+
+*Who computes the partials* is pluggable: the solvers obtain their local
+partial sums (and the Alg. 3.1 vector-update phase) from a compute
+substrate (:mod:`repro.core.substrate`) — ``"jnp"`` produces them with the
+plain jnp ops below, ``"pallas"`` with the fused one-HBM-pass kernels in
+:mod:`repro.kernels`.  Either way the stacked-partials contract is
+identical, so ``dot_reduce`` semantics and the synchronization counts are
+substrate-independent.
+
+Multi-RHS: every helper here is column-batched.  ``local_dots`` accepts
+``(n, m)`` operand blocks and yields ``(k, m)`` stacked partials (one
+column of dots per right-hand side, still one reduction), and
+``bicgsafe_coefficients`` broadcasts elementwise over trailing RHS axes —
+this is what :func:`repro.core.multirhs.solve_batched` runs on.
 """
 from __future__ import annotations
 
@@ -27,10 +41,18 @@ def local_dots(pairs: Sequence[Tuple[jax.Array, jax.Array]],
     On a sharded vector this yields the *local* partial sums; a single
     reduction of the stacked vector produces every global inner product of
     the phase at once (8 scalars -> one 8-word message, as in the paper).
+
+    ``(n, m)`` multi-RHS operands produce a ``(len(pairs), m)`` block of
+    per-column dots — the same single reduction then serves all m systems.
     """
     outs = []
     for a, b in pairs:
-        acc = jnp.sum(a * b, dtype=dtype) if dtype is not None else jnp.vdot(a, b)
+        if a.ndim == 2:
+            acc = jnp.sum(a * b, axis=0, dtype=dtype)
+        elif dtype is not None:
+            acc = jnp.sum(a * b, dtype=dtype)
+        else:
+            acc = jnp.vdot(a, b)
         outs.append(acc)
     return jnp.stack(outs)
 
@@ -87,6 +109,20 @@ def bicgsafe_coefficients(dots: jax.Array, i: jax.Array,
         first, bad_z0 | bad_alpha,
         bad_beta | bad_alpha | bad_zg)
     return beta, alpha, zeta, eta, f, rr, breakdown
+
+
+def pipelined_recurrence_tail(q, s, As, g, Aw, alpha, zeta, eta):
+    """p-BiCGSafe's recurred A-images after MV #2 (Aw = A w_i).
+
+    Returns (l, g_next, s_next) per Eqns. 3.7 / 3.10 / 3.2:
+    l_i == A t_i, g_{i+1} == A y_{i+1}, s_{i+1} == A r_{i+1}.
+    Shared by the single-RHS solver and the batched multi-RHS solver
+    (scalars may be () or (m,); (m,) broadcasts over (n, m) blocks).
+    """
+    l = q - Aw
+    g_next = zeta * As + eta * g - alpha * Aw
+    s_next = s - alpha * q - g_next
+    return l, g_next, s_next
 
 
 class SyncCounter:

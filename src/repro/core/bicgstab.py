@@ -17,7 +17,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ._common import init_guess, local_dots, safe_div, tree_select
+from ._common import init_guess, safe_div, tree_select
+from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
                     history_update, identity_reduce)
 
@@ -28,14 +29,17 @@ def bicgstab_solve(matvec: Callable,
                    *,
                    config: SolverConfig = SolverConfig(),
                    r0_star: Optional[jax.Array] = None,
-                   dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+                   dot_reduce: DotReduce = identity_reduce,
+                   substrate: SubstrateLike = "jnp") -> SolveResult:
     """Solve A x = b with BiCGStab."""
+    sub = get_substrate(substrate)
+    matvec = sub.as_matvec(matvec)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b
     rs = r0 if r0_star is None else r0_star.astype(b.dtype)
 
-    init = dot_reduce(local_dots([(r0, r0), (rs, r0)]))
+    init = dot_reduce(sub.dots([(r0, r0), (rs, r0)]))
     norm_r0 = jnp.sqrt(init[0])
     rho0 = init[1]                      # (r0*, r_0)
     z0 = jnp.zeros_like(b)
@@ -63,12 +67,12 @@ def bicgstab_solve(matvec: Callable,
         r, p = st["r"], st["p"]
         ap = matvec(p)
         # --- phase 1: single dot (r0*, Ap) ---
-        d1 = dot_reduce(local_dots([(rs, ap)]))
+        d1 = dot_reduce(sub.dots([(rs, ap)]))
         alpha, bad1 = safe_div(st["rho"], d1[0], eps)
         t = r - alpha * ap
         at = matvec(t)
         # --- phase 2: 5 fused dots ---
-        d2 = dot_reduce(local_dots([
+        d2 = dot_reduce(sub.dots([
             (at, t), (at, at), (rs, t), (rs, at), (t, t)]))
         omega, bad2 = safe_div(d2[0], d2[1], eps)
         rho_next = d2[2] - omega * d2[3]

@@ -14,7 +14,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ._common import init_guess, local_dots, safe_div, tree_select
+from ._common import init_guess, safe_div, tree_select
+from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
                     history_update, identity_reduce)
 
@@ -25,14 +26,17 @@ def cgs_solve(matvec: Callable,
               *,
               config: SolverConfig = SolverConfig(),
               r0_star: Optional[jax.Array] = None,
-              dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+              dot_reduce: DotReduce = identity_reduce,
+              substrate: SubstrateLike = "jnp") -> SolveResult:
     """Solve A x = b with CGS."""
+    sub = get_substrate(substrate)
+    matvec = sub.as_matvec(matvec)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b
     rs = r0 if r0_star is None else r0_star.astype(b.dtype)
 
-    init = dot_reduce(local_dots([(r0, r0), (rs, r0)]))
+    init = dot_reduce(sub.dots([(r0, r0), (rs, r0)]))
     norm_r0 = jnp.sqrt(init[0])
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
@@ -56,14 +60,14 @@ def cgs_solve(matvec: Callable,
         p, u, r = st["p"], st["u"], st["r"]
         vp = matvec(p)
         # --- phase 1 ---
-        d1 = dot_reduce(local_dots([(rs, vp)]))
+        d1 = dot_reduce(sub.dots([(rs, vp)]))
         alpha, bad1 = safe_div(st["rho"], d1[0], eps)
         q = u - alpha * vp
         uq = u + q
         x_next = st["x"] + alpha * uq
         r_next = r - alpha * matvec(uq)
         # --- phase 2 ---
-        d2 = dot_reduce(local_dots([(rs, r_next), (r_next, r_next)]))
+        d2 = dot_reduce(sub.dots([(rs, r_next), (r_next, r_next)]))
         rho_next = d2[0]
         beta, bad2 = safe_div(rho_next, st["rho"], eps)
         u_next = r_next + beta * q

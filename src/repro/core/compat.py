@@ -1,0 +1,31 @@
+"""jax version-compatibility shims.
+
+The repo targets a range of jax versions: newer releases expose
+``jax.shard_map`` (with ``check_vma``) and ``jax.sharding.AxisType``,
+while 0.4.x has ``jax.experimental.shard_map.shard_map`` (``check_rep``)
+and no axis types.  Call sites import these two wrappers instead of
+branching locally.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axis_names)
+    return jax.make_mesh(shape, axis_names,
+                         axis_types=(AxisType.Auto,) * len(axis_names))

@@ -26,6 +26,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import compat
 from .linear_operator import Stencil7Operator
 from .types import SolveResult, SolverConfig
 
@@ -108,12 +109,18 @@ def distributed_stencil_solve(solver: Callable,
                               *,
                               shard_axes: Optional[Sequence[str]] = None,
                               config: SolverConfig = SolverConfig(),
+                              substrate: str = "jnp",
                               jit: bool = True):
     """Solve the stencil system on ``mesh`` with any solver from repro.core.
 
     ``b_grid`` has shape (nx, ny, nz); its x-dimension is sharded over
     ``shard_axes`` (default: every mesh axis, row-major).  Returns a
     :class:`SolveResult` whose ``x`` is the sharded solution grid.
+
+    ``substrate`` selects the per-shard compute substrate
+    (:mod:`repro.core.substrate`): the fused dot partials and vector
+    updates inside each shard come from that substrate, while the global
+    reduction stays this driver's single ``psum`` either way.
     """
     axes = tuple(shard_axes if shard_axes is not None else mesh.axis_names)
     sizes = _axis_sizes(mesh, axes)
@@ -131,7 +138,7 @@ def distributed_stencil_solve(solver: Callable,
         mv = functools.partial(halo_stencil_matvec, c,
                                local_shape=local_shape, axes=axes, sizes=sizes)
         res = solver(mv, b_local.reshape(-1), config=config,
-                     dot_reduce=dot_reduce)
+                     dot_reduce=dot_reduce, substrate=substrate)
         return res._replace(x=res.x.reshape(local_shape))
 
     in_specs = P(axes)
@@ -139,8 +146,8 @@ def distributed_stencil_solve(solver: Callable,
         x=P(axes), iterations=P(), relres=P(), converged=P(),
         breakdown=P(), residual_history=P())
 
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
-                       out_specs=out_specs, check_vma=False)
+    fn = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
+                          out_specs=out_specs, check_vma=False)
     if jit:
         fn = jax.jit(fn)
     return fn(b_grid)

@@ -12,7 +12,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ._common import init_guess, local_dots, safe_div, tree_select
+from ._common import init_guess, safe_div, tree_select
+from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
                     history_update, identity_reduce)
 
@@ -23,14 +24,17 @@ def gpbicg_solve(matvec: Callable,
                  *,
                  config: SolverConfig = SolverConfig(),
                  r0_star: Optional[jax.Array] = None,
-                 dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+                 dot_reduce: DotReduce = identity_reduce,
+                 substrate: SubstrateLike = "jnp") -> SolveResult:
     """Solve A x = b with GPBi-CG (Alg. 2.2)."""
+    sub = get_substrate(substrate)
+    matvec = sub.as_matvec(matvec)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b
     rs = r0 if r0_star is None else r0_star.astype(b.dtype)
 
-    init = dot_reduce(local_dots([(r0, r0), (rs, r0)]))
+    init = dot_reduce(sub.dots([(r0, r0), (rs, r0)]))
     norm_r0 = jnp.sqrt(init[0])
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
@@ -61,14 +65,14 @@ def gpbicg_solve(matvec: Callable,
         p = r + beta * (st["p"] - u_prev)                 # line 7
         ap = matvec(p)                                    # line 8
         # --- phase 1: alpha ---
-        d1 = dot_reduce(local_dots([(rs, ap)]))
+        d1 = dot_reduce(sub.dots([(rs, ap)]))
         alpha, bad1 = safe_div(st["rho"], d1[0], eps)
 
         y = t_prev - r - alpha * w_prev + alpha * ap      # line 10
         t = r - alpha * ap                                # line 11
         at = matvec(t)                                    # line 12
         # --- phase 2: a..e for (zeta, eta) ---
-        d2 = dot_reduce(local_dots([
+        d2 = dot_reduce(sub.dots([
             (y, y), (at, t), (y, t), (at, y), (at, at)]))
         a_, b_, c_, d_, e_ = (d2[k] for k in range(5))
         zeta0, badz0 = safe_div(b_, e_, eps)              # line 15
@@ -84,7 +88,7 @@ def gpbicg_solve(matvec: Callable,
         x_next = st["x"] + alpha * p + z                        # line 23
         r_next = t - eta * y - zeta * at                        # line 24
         # --- phase 3: beta + residual norm ---
-        d3 = dot_reduce(local_dots([(rs, r_next), (r_next, r_next)]))
+        d3 = dot_reduce(sub.dots([(rs, r_next), (r_next, r_next)]))
         rho_next = d3[0]
         beta_next_num = alpha * rho_next
         beta_next, bad3 = safe_div(beta_next_num, zeta * st["rho"], eps)

@@ -28,21 +28,24 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ._common import (bicgsafe_coefficients, init_guess, local_dots,
-                      tree_select)
+from ._common import (bicgsafe_coefficients, init_guess,
+                      pipelined_recurrence_tail, tree_select)
+from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
                     history_update, identity_reduce)
 
 
 def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
-                     residual_replacement: bool):
+                     residual_replacement: bool, substrate: SubstrateLike):
+    sub = get_substrate(substrate)
+    matvec = sub.as_matvec(matvec)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b          # MV (init)
     rs = r0 if r0_star is None else r0_star.astype(b.dtype)
     s0 = matvec(r0)                                      # MV (init): s_0 = A r_0
 
-    norm_r0 = jnp.sqrt(dot_reduce(local_dots([(r0, r0)]))[0])
+    norm_r0 = jnp.sqrt(dot_reduce(sub.dots([(r0, r0)]))[0])
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
 
@@ -67,68 +70,55 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
         # communication hiding — in the lowered HLO there is no path from
         # the all-reduce to the matvec.
         As = matvec(s)
-        dots = dot_reduce(local_dots([
-            (s, s), (y, y), (s, y), (s, r), (y, r),
-            (rs, r), (rs, s), (rs, t_prev), (r, r)]))
+        dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, rs))
 
         beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
             dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)
         relres = jnp.sqrt(jnp.abs(rr)) / norm_r0
         done = relres <= config.tol
 
-        # --- vector updates (identical algebra to Alg. 2.3 lines 23-30) ---
-        p = r + beta * (st["p"] - st["u"])
-        o = s + beta * t_prev
-        u = zeta * o + eta * (y + beta * st["u"])
+        # --- blocked vector-update phase (Alg. 3.1 lines 23-32): one
+        # substrate call covers all 10 recurrence updates (one fused HBM
+        # pass on the pallas substrate).
+        upd = sub.axpy_phase(
+            dict(r=r, p=st["p"], u=st["u"], t=t_prev, y=y, z=st["z"],
+                 s=s, l=st["l"], g=st["g"], w=st["w"], x=st["x"], As=As),
+            (alpha, beta, zeta, eta))
+        p, o, u, q, w = (upd[k] for k in ("p", "o", "u", "q", "w"))
+        t, z, y_next, x_next, r_next = (
+            upd[k] for k in ("t", "z", "y", "x", "r"))
 
-        if residual_replacement:
-            # Alg. 4.1 lines 26-33: on replacement steps q, w come from
-            # true matvecs instead of the recurrences.
-            do_rr = ((st["i"] % config.rr_epoch) == 0) & (st["i"] > 0) \
-                & (st["i"] < config.rr_maxiter)
-            q, w = jax.lax.cond(
-                do_rr,
-                lambda: (matvec(o), matvec(u)),
-                lambda: (As + beta * st["l"],
-                         zeta * (As + beta * st["l"])
-                         + eta * (st["g"] + beta * st["w"])))
+        def pipe_tail():
+            """Recurrence closure: MV #2 and the three recurred A-images."""
+            Aw = matvec(w)                            # MV #2 (A w_i)
+            l_n, g_n, s_n = pipelined_recurrence_tail(
+                q, s, As, st["g"], Aw, alpha, zeta, eta)
+            return w, t, y_next, x_next, r_next, l_n, g_n, s_n
+
+        if not residual_replacement:
+            w, t, y_next, x_next, r_next, l, g_next, s_next = pipe_tail()
         else:
-            q = As + beta * st["l"]                       # == A o_i (3.5)
-            w = zeta * q + eta * (st["g"] + beta * st["w"])  # == A u_i (3.9)
-
-        t = o - w
-        z = zeta * r + eta * st["z"] - alpha * u
-        y_next = zeta * s + eta * y - alpha * w
-        x_next = st["x"] + alpha * p + z
-
-        if residual_replacement:
+            # Alg. 4.1: every rr_epoch-th step replaces the recurred
+            # quantities with true matvec values (p, o, u, z keep their
+            # recurrence values — they are exact either way).
             do_rr = ((st["i"] % config.rr_epoch) == 0) & (st["i"] > 0) \
                 & (st["i"] < config.rr_maxiter)
 
             def rr_branch():
-                # Alg. 4.1 lines 38-45: reset recurred vectors to truth.
-                r_n = b - matvec(x_next)
-                l_n = matvec(t)
-                g_n = matvec(y_next)
-                s_n = matvec(r_n)
-                return r_n, l_n, g_n, s_n
+                # Alg. 4.1 lines 26-33 + 38-45: w from a true matvec, then
+                # reset r, l, g, s to their true values.
+                w_t = matvec(u)                       # true A u_i
+                t_t = o - w_t
+                y_t = zeta * s + eta * y - alpha * w_t
+                x_t = st["x"] + alpha * p + z
+                r_t = b - matvec(x_t)
+                l_t = matvec(t_t)
+                g_t = matvec(y_t)
+                s_t = matvec(r_t)
+                return w_t, t_t, y_t, x_t, r_t, l_t, g_t, s_t
 
-            def pipe_branch():
-                r_n = r - alpha * o - y_next
-                Aw = matvec(w)                            # MV #2 (A w_i)
-                l_n = q - Aw                              # == A t_i (3.7)
-                g_n = zeta * As + eta * st["g"] - alpha * Aw   # (3.10)
-                s_n = s - alpha * q - g_n                 # == A r_{i+1} (3.2)
-                return r_n, l_n, g_n, s_n
-
-            r_next, l, g_next, s_next = jax.lax.cond(do_rr, rr_branch,
-                                                     pipe_branch)
-        else:
-            r_next = r - alpha * o - y_next
-            Aw = matvec(w)                                # MV #2 (A w_i)
-            l = q - Aw                                    # == A t_i (3.7)
-            g_next = zeta * As + eta * st["g"] - alpha * Aw    # (3.10)
-            s_next = s - alpha * q - g_next               # == A r_{i+1} (3.2)
+            w, t, y_next, x_next, r_next, l, g_next, s_next = jax.lax.cond(
+                do_rr, rr_branch, pipe_tail)
 
         hist_i = history_update(st["hist"], st["i"], relres, config)
         new = dict(
@@ -154,10 +144,11 @@ def pbicgsafe_solve(matvec: Callable,
                     *,
                     config: SolverConfig = SolverConfig(),
                     r0_star: Optional[jax.Array] = None,
-                    dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+                    dot_reduce: DotReduce = identity_reduce,
+                    substrate: SubstrateLike = "jnp") -> SolveResult:
     """Solve A x = b with p-BiCGSafe (paper Alg. 3.1)."""
     return _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
-                            residual_replacement=False)
+                            residual_replacement=False, substrate=substrate)
 
 
 def pbicgsafe_rr_solve(matvec: Callable,
@@ -166,11 +157,12 @@ def pbicgsafe_rr_solve(matvec: Callable,
                        *,
                        config: SolverConfig = SolverConfig(),
                        r0_star: Optional[jax.Array] = None,
-                       dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+                       dot_reduce: DotReduce = identity_reduce,
+                       substrate: SubstrateLike = "jnp") -> SolveResult:
     """Solve A x = b with p-BiCGSafe-rr (paper Alg. 4.1).
 
     ``config.rr_epoch`` is the paper's ``m`` (default 100, the paper's
     default), ``config.rr_maxiter`` the cutoff ``M``.
     """
     return _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
-                            residual_replacement=True)
+                            residual_replacement=True, substrate=substrate)

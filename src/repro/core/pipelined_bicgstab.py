@@ -16,7 +16,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ._common import init_guess, local_dots, safe_div, tree_select
+from ._common import init_guess, safe_div, tree_select
+from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
                     history_update, identity_reduce)
 
@@ -27,8 +28,11 @@ def pbicgstab_solve(matvec: Callable,
                     *,
                     config: SolverConfig = SolverConfig(),
                     r0_star: Optional[jax.Array] = None,
-                    dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+                    dot_reduce: DotReduce = identity_reduce,
+                    substrate: SubstrateLike = "jnp") -> SolveResult:
     """Solve A x = b with pipelined BiCGStab (Cools-Vanroose Alg. 5)."""
+    sub = get_substrate(substrate)
+    matvec = sub.as_matvec(matvec)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b
@@ -36,7 +40,7 @@ def pbicgstab_solve(matvec: Callable,
 
     w0 = matvec(r0)
     t0 = matvec(w0)
-    init = dot_reduce(local_dots([(r0, r0), (rs, r0), (rs, w0)]))
+    init = dot_reduce(sub.dots([(r0, r0), (rs, r0), (rs, w0)]))
     norm_r0 = jnp.sqrt(init[0])
     rho0 = init[1]
     alpha0, bad0 = safe_div(rho0, init[2], eps)
@@ -76,7 +80,7 @@ def pbicgstab_solve(matvec: Callable,
         # v_i := A z_i (= A^3 p_i); A y_i is then t_i - alpha v_i, so the
         # dots here depend on none of this iteration's matvec output.
         v = matvec(z)                                     # MV #1
-        d1 = dot_reduce(local_dots([(q, y), (y, y), (q, q)]))
+        d1 = dot_reduce(sub.dots([(q, y), (y, y), (q, q)]))
         omega, bad1 = safe_div(d1[0], d1[1], eps)
 
         x_next = st["x"] + alpha * p + omega * q
@@ -86,7 +90,7 @@ def pbicgstab_solve(matvec: Callable,
 
         # --- phase 2 (overlaps t = A w_next) ---
         t_next = matvec(w_next)                           # MV #2
-        d2 = dot_reduce(local_dots([
+        d2 = dot_reduce(sub.dots([
             (rs, r_next), (rs, w_next), (rs, s), (rs, z)]))
         rho_next = d2[0]
         beta_next_num = alpha * rho_next

@@ -12,8 +12,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ._common import (bicgsafe_coefficients, init_guess, local_dots,
-                      tree_select)
+from ._common import bicgsafe_coefficients, init_guess, tree_select
+from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
                     history_update, identity_reduce)
 
@@ -24,14 +24,17 @@ def ssbicgsafe2_solve(matvec: Callable,
                       *,
                       config: SolverConfig = SolverConfig(),
                       r0_star: Optional[jax.Array] = None,
-                      dot_reduce: DotReduce = identity_reduce) -> SolveResult:
+                      dot_reduce: DotReduce = identity_reduce,
+                      substrate: SubstrateLike = "jnp") -> SolveResult:
     """Solve A x = b with ssBiCGSafe2 (Alg. 2.3)."""
+    sub = get_substrate(substrate)
+    matvec = sub.as_matvec(matvec)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b
     rs = r0 if r0_star is None else r0_star.astype(b.dtype)
 
-    norm_r0_sq = dot_reduce(local_dots([(r0, r0)]))[0]
+    norm_r0_sq = dot_reduce(sub.dots([(r0, r0)]))[0]
     norm_r0 = jnp.sqrt(norm_r0_sq)
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
@@ -54,9 +57,7 @@ def ssbicgsafe2_solve(matvec: Callable,
         r, y, t_prev = st["r"], st["y"], st["t"]
         s = matvec(r)                                   # MV #1: s_i = A r_i
         # --- single fused reduction phase (depends on s -> no overlap) ---
-        dots = dot_reduce(local_dots([
-            (s, s), (y, y), (s, y), (s, r), (y, r),
-            (rs, r), (rs, s), (rs, t_prev), (r, r)]))
+        dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, rs))
         beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
             dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)
         relres = jnp.sqrt(jnp.abs(rr)) / norm_r0

@@ -10,6 +10,14 @@ the paper: local partial sums -> one global reduction).
 Layout: vectors are reshaped to (rows, 128) lanes; the grid walks row
 blocks sequentially and accumulates into the (1, 16)-padded output
 (first 9 entries meaningful).
+
+``fused_dots_batched_pallas`` is the multi-RHS generalization: inputs are
+(n, m) column blocks (m right-hand sides) and the output is a (9, m)
+partial block — the m-column analogue of the same phase.  One HBM pass
+computes 9*m inner products, and the solver still reduces the whole block
+with ONE ``psum``: batching amortizes both the memory traffic and the
+reduction latency across right-hand sides (Krasnopolsky's multi-RHS
+argument applied to the pipelined communication model).
 """
 from __future__ import annotations
 
@@ -68,3 +76,59 @@ def fused_dots_pallas(s, y, r, t, rs, *, block_rows: int = 256,
         interpret=interpret,
     )(*args)
     return out[0, :9]
+
+
+def _batched_kernel(s_ref, y_ref, r_ref, t_ref, rs_ref, out_ref):
+    i = pl.program_id(1)                  # row block within this column
+    acc = out_ref.dtype
+    s = s_ref[...].astype(acc)            # (1, block_rows, LANES)
+    y = y_ref[...].astype(acc)
+    r = r_ref[...].astype(acc)
+    t = t_ref[...].astype(acc)
+    rs = rs_ref[...].astype(acc)
+    partial = jnp.stack([                 # the 9 dots of column j
+        jnp.sum(s * s), jnp.sum(y * y), jnp.sum(s * y), jnp.sum(s * r),
+        jnp.sum(y * r), jnp.sum(rs * r), jnp.sum(rs * s), jnp.sum(rs * t),
+        jnp.sum(r * r)])
+    partial = jnp.pad(partial, (0, OUT_PAD - 9)).reshape(OUT_PAD, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_dots_batched_pallas(s, y, r, t, rs, *, block_rows: int = 256,
+                              interpret: bool = False) -> jax.Array:
+    """Multi-RHS fused dots: (n, m) inputs -> (9, m) partials (fp32+).
+
+    Rows stay on the lane axis exactly as in the 1-D kernel (each column
+    is laid out as (rows, 128) tiles) and the grid walks (column,
+    row-block), so the per-column memory traffic matches the single-RHS
+    kernel — no padding of the RHS axis up to a lane multiple, which for
+    small m would multiply HBM reads by 128/m.
+    """
+    n, m = s.shape
+    lane_rows = -(-n // LANES)
+    rows = -(-lane_rows // block_rows) * block_rows
+    padded = rows * LANES
+
+    def prep(v):
+        # (n, m) -> (m, rows, LANES): column-major tiles, rows on lanes
+        return jnp.pad(v.T, ((0, 0), (0, padded - n))).reshape(
+            m, rows, LANES)
+
+    args = [prep(v) for v in (s, y, r, t, rs)]
+    vec_spec = pl.BlockSpec((1, block_rows, LANES), lambda j, i: (j, i, 0))
+    out = pl.pallas_call(
+        _batched_kernel,
+        grid=(m, rows // block_rows),
+        in_specs=[vec_spec] * 5,
+        out_specs=pl.BlockSpec((OUT_PAD, 1), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (OUT_PAD, m), jnp.promote_types(s.dtype, jnp.float32)),
+        interpret=interpret,
+    )(*args)
+    return out[:9, :]

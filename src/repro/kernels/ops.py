@@ -4,6 +4,15 @@ Each op dispatches to the hand-tiled Pallas kernel on TPU and to
 ``interpret=True`` (Python emulation of the same kernel body) elsewhere, so
 the call sites are backend-agnostic.  ``repro.kernels.ref`` holds the
 pure-jnp oracles the kernels are validated against.
+
+These ops are the backing store of the ``"pallas"`` compute substrate
+(:mod:`repro.core.substrate`): the solver hot loop calls ``fused_dots`` /
+``fused_axpy`` / ``spmv_ell`` through the substrate object rather than
+inlining jnp, so the same iteration body runs against either the reference
+jnp path or these kernels.  ``fused_dots`` accepts both single-RHS ``(n,)``
+vectors (9 partials) and multi-RHS ``(n, m)`` blocks ((9, m) partials) —
+in both cases the result is reduced by the solver's single ``psum``, which
+is what keeps the synchronization count at one regardless of m.
 """
 from __future__ import annotations
 
@@ -17,7 +26,7 @@ import numpy as np
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .fused_axpy import fused_axpy_pallas
-from .fused_dots import fused_dots_pallas
+from .fused_dots import fused_dots_batched_pallas, fused_dots_pallas
 from .spmv_ell import spmv_ell_pallas
 
 
@@ -26,7 +35,14 @@ def _interpret() -> bool:
 
 
 def fused_dots(s, y, r, t, rs) -> jax.Array:
-    """9 fused inner products (local partials; reduce with one psum)."""
+    """9 fused inner products (local partials; reduce with one psum).
+
+    1-D ``(n,)`` inputs -> ``(9,)``; 2-D ``(n, m)`` multi-RHS blocks ->
+    ``(9, m)`` (one per-column dot block, still one reduction).
+    """
+    if s.ndim == 2:
+        return fused_dots_batched_pallas(s, y, r, t, rs,
+                                         interpret=_interpret())
     return fused_dots_pallas(s, y, r, t, rs, interpret=_interpret())
 
 

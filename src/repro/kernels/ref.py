@@ -17,6 +17,17 @@ def fused_dots(s, y, r, t, rs) -> jax.Array:
         jnp.sum(r * r, dtype=f32)])
 
 
+def fused_dots_batched(s, y, r, t, rs) -> jax.Array:
+    """Multi-RHS fused dots: (n, m) inputs -> (9, m) per-column dots."""
+    f32 = jnp.promote_types(s.dtype, jnp.float32)
+    return jnp.stack([
+        jnp.sum(s * s, axis=0, dtype=f32), jnp.sum(y * y, axis=0, dtype=f32),
+        jnp.sum(s * y, axis=0, dtype=f32), jnp.sum(s * r, axis=0, dtype=f32),
+        jnp.sum(y * r, axis=0, dtype=f32), jnp.sum(rs * r, axis=0, dtype=f32),
+        jnp.sum(rs * s, axis=0, dtype=f32), jnp.sum(rs * t, axis=0, dtype=f32),
+        jnp.sum(r * r, axis=0, dtype=f32)])
+
+
 def spmv_ell(values, cols, x) -> jax.Array:
     """ELLPACK SpMV: y[i] = sum_j values[i,j] * x[cols[i,j]]."""
     return jnp.sum(values * x[cols], axis=1)

@@ -6,15 +6,15 @@ touch jax device state (device count is locked on first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_solver_mesh(n_devices: int | None = None, *,
@@ -34,5 +34,4 @@ def make_solver_mesh(n_devices: int | None = None, *,
             m *= 2
         d = n // m
         shape = (d, m)
-    return jax.make_mesh(shape, axes[:len(shape)],
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes[:len(shape)])

@@ -14,9 +14,22 @@ if SRC not in sys.path:
     sys.path.insert(0, os.path.abspath(SRC))
 
 
+def enable_x64(flag: bool = True):
+    """x64 context manager compatible across jax versions.
+
+    ``jax.enable_x64`` was removed in jax 0.4.37; the supported spelling is
+    ``jax.experimental.enable_x64``.  Test modules import this helper instead
+    of reaching into jax directly.
+    """
+    import jax
+    if hasattr(jax, "enable_x64"):          # pragma: no cover - old jax
+        return jax.enable_x64(flag)
+    from jax.experimental import enable_x64 as _e
+    return _e(flag)
+
+
 @pytest.fixture
 def x64():
     """Run a test in double precision (solver fidelity, paper protocol)."""
-    import jax
-    with jax.enable_x64(True):
+    with enable_x64(True):
         yield

@@ -5,12 +5,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import enable_x64
 from repro.core.linear_operator import ELLOperator
 from repro.core import matrices as M
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_axpy import IN_ORDER, fused_axpy_pallas
-from repro.kernels.fused_dots import fused_dots_pallas
+from repro.kernels.fused_dots import (fused_dots_batched_pallas,
+                                      fused_dots_pallas)
 from repro.kernels.spmv_ell import spmv_ell_pallas
 
 
@@ -21,7 +23,7 @@ def rand(key, shape, dtype):
 @pytest.mark.parametrize("n", [100, 4096, 40_000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_fused_dots(n, dtype):
-    with jax.enable_x64(dtype == jnp.float64):
+    with enable_x64(dtype == jnp.float64):
         ks = jax.random.split(jax.random.PRNGKey(0), 5)
         vecs = [rand(k, (n,), dtype) for k in ks]
         got = fused_dots_pallas(*vecs, interpret=True)
@@ -30,11 +32,33 @@ def test_fused_dots(n, dtype):
                                    rtol=2e-5)
 
 
+@pytest.mark.parametrize("n,m", [(100, 1), (1000, 7), (4096, 32),
+                                 (513, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_dots_batched(n, m, dtype):
+    """Multi-RHS kernel: (n, m) blocks -> (9, m) partials, incl. lane
+    padding (m=7, 130) and row-block padding (n=513)."""
+    with enable_x64(dtype == jnp.float64):
+        ks = jax.random.split(jax.random.PRNGKey(5), 5)
+        vecs = [rand(k, (n, m), dtype) for k in ks]
+        got = fused_dots_batched_pallas(*vecs, interpret=True)
+        want = ref.fused_dots_batched(*vecs)
+        assert got.shape == (9, m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=1e-5)
+        # column j of the batched kernel == the 1-D kernel on column j
+        col = [v[:, 0] for v in vecs]
+        np.testing.assert_allclose(
+            np.asarray(got[:, 0]),
+            np.asarray(fused_dots_pallas(*col, interpret=True)),
+            rtol=2e-4, atol=1e-5)
+
+
 @pytest.mark.parametrize("n,stencil", [(512, True), (4096, True),
                                        (1000, False)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_spmv_ell(n, stencil, dtype):
-    with jax.enable_x64(dtype == jnp.float64):
+    with enable_x64(dtype == jnp.float64):
         if stencil:
             # banded matrix: tridiagonal-ish with k=5
             rng = np.random.default_rng(0)
@@ -60,7 +84,7 @@ def test_spmv_ell(n, stencil, dtype):
 @pytest.mark.parametrize("n", [100, 8192])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
 def test_fused_axpy(n, dtype):
-    with jax.enable_x64(dtype == jnp.float64):
+    with enable_x64(dtype == jnp.float64):
         keys = jax.random.split(jax.random.PRNGKey(1), len(IN_ORDER))
         vecs = {k: rand(kk, (n,), dtype) for k, kk in zip(IN_ORDER, keys)}
         scalars = (0.3, -0.7, 1.1, 0.2)
@@ -114,7 +138,7 @@ def test_solver_with_pallas_kernels():
     from repro.core import SolverConfig, pbicgsafe_solve
     from repro.kernels import ops
 
-    with jax.enable_x64(True):
+    with enable_x64(True):
         op, b, xt = M.poisson3d(8)   # stencil -> banded under natural order?
         # use a 1-D banded operator instead (guaranteed band)
         n = 2048

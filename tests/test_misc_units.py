@@ -79,15 +79,15 @@ def test_ring_shift_is_exact_shift():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.core import compat
         from repro.core.distributed import ring_shift
-        mesh = jax.make_mesh((4, 2), ("a", "b"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 2), ("a", "b"))
         x = jnp.arange(8.0).reshape(8, 1)
         def f(x):
             fwd = ring_shift(x, ("a", "b"), (4, 2), True)
             bwd = ring_shift(x, ("a", "b"), (4, 2), False)
             return fwd, bwd
-        fwd, bwd = jax.jit(jax.shard_map(f, mesh=mesh,
+        fwd, bwd = jax.jit(compat.shard_map(f, mesh=mesh,
             in_specs=P(("a", "b")), out_specs=(P(("a", "b")),) * 2))(x)
         np.testing.assert_allclose(np.asarray(fwd).ravel(),
                                    [0,0,1,2,3,4,5,6])

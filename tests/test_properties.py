@@ -1,11 +1,14 @@
 """Property-based tests (hypothesis) for solver invariants."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from conftest import enable_x64  # noqa: E402
 
 from repro.core import (SolverConfig, pbicgsafe_solve, pbicgstab_solve,
                         ssbicgsafe2_solve)
@@ -22,7 +25,7 @@ SETTINGS = dict(max_examples=12, deadline=None,
        dominance=st.floats(1.05, 2.0))
 def test_pbicgsafe_solves_diag_dominant(n, seed, dominance):
     """Any row-diagonally-dominant system is solved to tolerance."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         op, b, xt = M.random_nonsym(n, min(6, n // 4 + 2), seed=seed,
                                     diag_dominance=dominance)
         res = pbicgsafe_solve(op.matvec, b,
@@ -38,7 +41,7 @@ def test_pbicgsafe_solves_diag_dominant(n, seed, dominance):
 def test_pipelined_equals_baseline_iterations(n, seed):
     """Invariant: p-BiCGSafe and ssBiCGSafe2 take the same iteration count
     (±1 for round-off at the stopping boundary) on well-conditioned systems."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         op, b, _ = M.random_nonsym(n, 5, seed=seed, diag_dominance=1.5)
         cfg = SolverConfig(tol=1e-8, maxiter=1000)
         i1 = int(ssbicgsafe2_solve(op.matvec, b, config=cfg).iterations)
@@ -50,7 +53,7 @@ def test_pipelined_equals_baseline_iterations(n, seed):
 @given(n=st.integers(16, 80), seed=st.integers(0, 2**16))
 def test_ell_csr_matvec_agree(n, seed):
     """Format invariance: ELL and CSR encode the same matrix."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         op_csr, b, _ = M.random_nonsym(n, 5, seed=seed)
         op_ell = ELLOperator.from_csr(op_csr)
         x = jnp.asarray(np.random.default_rng(seed).standard_normal(n))
@@ -63,7 +66,7 @@ def test_ell_csr_matvec_agree(n, seed):
 @given(seed=st.integers(0, 2**16), shift=st.floats(-0.3, 0.3))
 def test_solution_invariant_under_x0(seed, shift):
     """The converged solution does not depend on the initial guess."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         op, b, xt = M.random_nonsym(64, 5, seed=seed, diag_dominance=1.4)
         x0 = jnp.full_like(b, shift)
         r1 = pbicgsafe_solve(op.matvec, b, config=SolverConfig())
@@ -78,7 +81,7 @@ def test_solution_invariant_under_x0(seed, shift):
 def test_residual_history_monotone_envelope(n, seed):
     """The min-so-far envelope of the residual history is non-increasing
     and ends below tol (smooth convergence claim for the Safe family)."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         op, b, _ = M.random_nonsym(n, 5, seed=seed, diag_dominance=1.5)
         cfg = SolverConfig(tol=1e-8, maxiter=1000, record_history=True)
         res = pbicgsafe_solve(op.matvec, b, config=cfg)

@@ -1,0 +1,265 @@
+"""Compute-substrate tests: jnp/pallas parity, sync counts, the structural
+overlap invariant, and the batched multi-RHS path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from conftest import enable_x64
+from repro.core import (SOLVERS, SolverConfig, get_substrate, pbicgsafe_solve,
+                        solve_batched, ssbicgsafe2_solve)
+from repro.core import matrices as M
+from repro.core._common import SyncCounter
+from repro.core.types import identity_reduce
+
+SEED_PROBLEMS = {
+    "poisson3d": lambda: M.poisson3d(8),
+    "convdiff": lambda: M.convection_diffusion(10, peclet=1.0),
+}
+
+
+# ---------------------------------------------------------------------------
+# substrate resolution
+# ---------------------------------------------------------------------------
+
+def test_get_substrate_resolution():
+    assert get_substrate(None).name == "jnp"
+    assert get_substrate("jnp").name == "jnp"
+    assert get_substrate("pallas").name == "pallas"
+    sub = get_substrate("pallas")
+    assert get_substrate(sub) is sub
+    with pytest.raises(ValueError, match="unknown substrate"):
+        get_substrate("cuda")
+
+
+# ---------------------------------------------------------------------------
+# jnp <-> pallas parity (interpret mode on CPU: same kernel bodies as TPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prob", list(SEED_PROBLEMS))
+@pytest.mark.parametrize("sname", ["p-bicgsafe", "ssbicgsafe2"])
+def test_pallas_substrate_iterate_parity(x64, prob, sname):
+    """Both substrates run the same algorithm: same iterate trajectory up
+    to fp64 summation-order noise.  On the SPD seed problem the iteration
+    counts are identical and the iterates bitwise-close; on the
+    convection-diffusion problem the tol check may flip by one iteration
+    (the kernel accumulates block-wise, jnp.vdot pairwise), so there we
+    assert the drift bound and solution-level parity instead."""
+    op, b, xt = SEED_PROBLEMS[prob]()
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    r_jnp = SOLVERS[sname](op.matvec, b, config=cfg, substrate="jnp")
+    r_pal = SOLVERS[sname](op.matvec, b, config=cfg, substrate="pallas")
+    assert bool(r_jnp.converged) and bool(r_pal.converged)
+    if prob == "poisson3d":
+        assert int(r_jnp.iterations) == int(r_pal.iterations), (
+            f"{sname}/{prob}: substrate changed the iteration count")
+        np.testing.assert_allclose(np.asarray(r_pal.x), np.asarray(r_jnp.x),
+                                   rtol=1e-9, atol=1e-10)
+        np.testing.assert_allclose(float(r_pal.relres), float(r_jnp.relres),
+                                   rtol=1e-6)
+    else:
+        assert abs(int(r_jnp.iterations) - int(r_pal.iterations)) <= 1
+        for res in (r_jnp, r_pal):
+            true = float(jnp.linalg.norm(b - op.matvec(res.x))
+                         / jnp.linalg.norm(b))
+            assert true < 1e-6
+        np.testing.assert_allclose(np.asarray(r_pal.x), np.asarray(r_jnp.x),
+                                   rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("sname", ["bicgstab", "p-bicgstab", "gpbicg",
+                                   "p-bicgsafe-rr", "cgs"])
+def test_all_entry_points_accept_substrate(x64, sname):
+    """Every solver entry point takes substrate= and still converges."""
+    op, b, xt = M.poisson3d(8)
+    res = SOLVERS[sname](op.matvec, b, config=SolverConfig(tol=1e-8),
+                         substrate="pallas")
+    assert bool(res.converged)
+    assert float(jnp.linalg.norm(res.x - xt) / jnp.linalg.norm(xt)) < 1e-5
+
+
+def test_pallas_substrate_dispatches_banded_ell_spmv(x64):
+    """An ELLOperator with banded structure routes through the Pallas SpMV
+    when passed (as an operator) to a solver on the pallas substrate."""
+    n = 1024
+    rng = np.random.default_rng(0)
+    offs = np.array([-2, -1, 0, 1, 2])
+    cols = np.clip(np.arange(n)[:, None] + offs[None, :], 0, n - 1)
+    vals = rng.standard_normal((n, 5))
+    vals[:, 2] = 1.0 + 1.2 * np.abs(vals).sum(axis=1)
+    from repro.core import ELLOperator
+    ell = ELLOperator(jnp.asarray(vals), jnp.asarray(cols, np.int32), n)
+    xt = jnp.ones((n,), jnp.float64)
+    b = ell.matvec(xt)
+    res = pbicgsafe_solve(ell, b, config=SolverConfig(tol=1e-10),
+                          substrate="pallas")
+    assert bool(res.converged)
+    assert float(jnp.linalg.norm(res.x - xt) / jnp.linalg.norm(xt)) < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# communication structure survives the refactor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("sname,per_iter", [("ssbicgsafe2", 1),
+                                            ("p-bicgsafe", 1)])
+def test_sync_count_per_substrate(x64, substrate, sname, per_iter):
+    """The substrate refactor keeps ONE reduction/iter for the safes."""
+    op, b, _ = M.nonsym_dense(64)
+    counter = SyncCounter(identity_reduce)
+    jax.make_jaxpr(
+        lambda bb: SOLVERS[sname](op.matvec, bb,
+                                  config=SolverConfig(maxiter=10),
+                                  dot_reduce=counter,
+                                  substrate=substrate))(b)
+    assert counter.calls == 1 + per_iter
+
+
+def _while_body(jaxpr):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "while":
+            return eqn.params["body_jaxpr"].jaxpr
+    raise AssertionError("no while_loop in solver jaxpr")
+
+
+def _reduction_sees_matvec(solve, op, b, substrate) -> bool:
+    """Structural overlap probe (bench_overlap-style, single process).
+
+    The matvec output and the fused-dot partials are both tagged with
+    ``optimization_barrier``; in the while-body jaxpr we then check whether
+    the reduction's tag is transitively computed from the matvec's tag.
+    False == no dependency edge == the reduction may overlap the matvec.
+    """
+    mv = lambda x: lax.optimization_barrier(op.matvec(x))  # noqa: E731
+    spy = lax.optimization_barrier
+
+    jaxpr = jax.make_jaxpr(lambda bb: solve(
+        mv, bb, config=SolverConfig(maxiter=10), dot_reduce=spy,
+        substrate=substrate))(b)
+    body = _while_body(jaxpr.jaxpr)
+
+    dot_eqn, mv_outs = None, set()
+    for eqn in body.eqns:
+        if eqn.primitive.name != "optimization_barrier":
+            continue
+        if eqn.outvars[0].aval.shape == (9,):
+            dot_eqn = eqn
+        else:
+            mv_outs.update(eqn.outvars)
+    assert dot_eqn is not None, "fused 9-dot phase not found in loop body"
+    assert mv_outs, "matvec tag not found in loop body"
+
+    needed = {v for v in dot_eqn.invars if hasattr(v, "aval")
+              and not isinstance(v, jax.core.Literal)}
+    for eqn in reversed(body.eqns):
+        if eqn is dot_eqn:
+            continue
+        if any(ov in needed for ov in eqn.outvars):
+            needed |= {v for v in eqn.invars
+                       if not isinstance(v, jax.core.Literal)}
+    return bool(mv_outs & needed)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_overlap_edge_survives_substrate_refactor(x64, substrate):
+    """p-BiCGSafe's fused dots read only {s, y, r, t_prev, rs}: no path
+    from the in-flight matvec to the reduction (the paper's overlap
+    property), on EITHER substrate; ssBiCGSafe2's reduction consumes the
+    fresh matvec, so there the edge must exist."""
+    op, b, _ = M.nonsym_dense(64)
+    assert not _reduction_sees_matvec(pbicgsafe_solve, op, b, substrate)
+    assert _reduction_sees_matvec(ssbicgsafe2_solve, op, b, substrate)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-RHS path
+# ---------------------------------------------------------------------------
+
+def _rhs_block(b, m, seed=3):
+    keys = jax.random.split(jax.random.PRNGKey(seed), m)
+    cols = [b] + [jax.random.normal(k, b.shape, b.dtype) for k in keys[1:]]
+    return jnp.stack(cols, axis=1)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_batched_matches_looped(x64, substrate):
+    """Each batched column solves its system (true residual at tol) and
+    needs essentially the per-column iteration counts of looped solves."""
+    op, b, _ = M.convection_diffusion(10, peclet=1.0)
+    B = _rhs_block(b, 4)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    res = solve_batched(op.matvec, B, config=cfg, substrate=substrate)
+    assert bool(np.asarray(res.converged).all())
+    for j in range(B.shape[1]):
+        true = float(jnp.linalg.norm(B[:, j] - op.matvec(res.x[:, j]))
+                     / jnp.linalg.norm(B[:, j]))
+        assert true < 1e-6, (j, true)
+        rj = pbicgsafe_solve(op.matvec, B[:, j], config=cfg)
+        # same algorithm per column; allow a couple iters of fp drift
+        assert abs(int(res.iterations[j]) - int(rj.iterations)) <= 3
+
+
+def test_batched_single_reduction_any_m(x64):
+    """Exactly one dot_reduce per iteration regardless of m."""
+    op, b, _ = M.poisson3d(8)
+    for m in (1, 3, 17):
+        counter = SyncCounter(identity_reduce)
+        jax.make_jaxpr(lambda bb: solve_batched(
+            op.matvec, bb, config=SolverConfig(maxiter=10),
+            dot_reduce=counter))(_rhs_block(b, m))
+        assert counter.calls == 2, (m, counter.calls)   # init + 1/iter
+
+
+def test_batched_reduction_is_one_9xm_block(x64):
+    """The per-iteration message is a single (9, m) partial block."""
+    op, b, _ = M.poisson3d(8)
+    m = 5
+    sizes = []
+
+    def spy(partials):
+        sizes.append(partials.shape)
+        return partials
+
+    jax.make_jaxpr(lambda bb: solve_batched(
+        op.matvec, bb, config=SolverConfig(maxiter=5),
+        dot_reduce=spy))(_rhs_block(b, m))
+    assert sizes[0] == (1, m)     # init ||r0|| per column
+    assert sizes[1] == (9, m)     # the fused phase, all m systems at once
+
+
+def test_batched_per_rhs_masking(x64):
+    """Columns converge at their own iteration; early columns freeze."""
+    op, b, _ = M.poisson3d(8)
+    # power-of-two scaling keeps the fp trajectory bitwise identical
+    B = jnp.stack([b, (2.0 ** -20) * b, jax.random.normal(
+        jax.random.PRNGKey(0), b.shape, b.dtype)], axis=1)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    res = solve_batched(op.matvec, B, config=cfg)
+    iters = np.asarray(res.iterations)
+    assert bool(np.asarray(res.converged).all())
+    # scaled column converges in the same iterations as its parent
+    assert iters[1] == iters[0]
+    assert np.asarray(res.relres).max() <= 1e-8
+
+
+def test_batched_history_and_x0(x64):
+    op, b, _ = M.poisson3d(8)
+    B = _rhs_block(b, 3)
+    X0 = jnp.full_like(B, 0.37)
+    cfg = SolverConfig(tol=1e-8, maxiter=500, record_history=True)
+    res = solve_batched(op.matvec, B, X0, config=cfg)
+    assert bool(np.asarray(res.converged).all())
+    h = np.asarray(res.residual_history)
+    assert h.shape == (501, 3)
+    for j in range(3):
+        it = int(res.iterations[j])
+        assert np.isfinite(h[:it + 1, j]).all()
+        assert np.isnan(h[it + 1:, j]).all()
+
+
+def test_batched_rejects_1d_rhs(x64):
+    op, b, _ = M.poisson3d(8)
+    with pytest.raises(ValueError, match=r"\(n, m\)"):
+        solve_batched(op.matvec, b)

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from conftest import enable_x64
+
 
 def test_end_to_end_solver_pipeline():
     """The paper's full story in one test: a convection-diffusion system is
@@ -13,7 +15,7 @@ def test_end_to_end_solver_pipeline():
     from repro.core._common import SyncCounter
     from repro.core.types import identity_reduce
 
-    with jax.enable_x64(True):
+    with enable_x64(True):
         op, b, x_true = M.convection_diffusion(12, peclet=1.0)
         results = {}
         syncs = {}

@@ -17,15 +17,13 @@ import jax.numpy as jnp  # noqa: E402
 from repro.core import (SolverConfig, pbicgsafe_solve,  # noqa: E402
                         ssbicgsafe2_solve)
 from repro.core import matrices as M  # noqa: E402
-from repro.core.distributed import distributed_stencil_solve  # noqa: E402
+from repro.core.distributed import (distributed_stencil_solve,  # noqa: E402
+                                    distributed_stencil_solve_batched)
 from repro.launch.hlo_analysis import (HloGraph,  # noqa: E402
                                        split_computations)
 
 
-def analyze(solver, op, b_grid, mesh):
-    fn = jax.jit(lambda b: distributed_stencil_solve(
-        solver, op, b, mesh, config=SolverConfig(maxiter=100), jit=False))
-    text = fn.lower(b_grid).compile().as_text()
+def _analyze_text(text):
     comps = split_computations(text)
     # the solver body is the computation holding the fused-dots all-reduce
     best = None
@@ -53,14 +51,34 @@ def analyze(solver, op, b_grid, mesh):
     }
 
 
+def analyze(solver, op, b_grid, mesh):
+    fn = jax.jit(lambda b: distributed_stencil_solve(
+        solver, op, b, mesh, config=SolverConfig(maxiter=100), jit=False))
+    return _analyze_text(fn.lower(b_grid).compile().as_text())
+
+
+def analyze_batched(op, B_grid, mesh):
+    """Batched+sharded p-BiCGSafe: the (9, m) block all-reduce must keep
+    the no-dependency edge to the in-flight block matvec's halo permutes —
+    batching the reduction must not serialize it behind the SpMV."""
+    fn = jax.jit(lambda B: distributed_stencil_solve_batched(
+        op, B, mesh, config=SolverConfig(maxiter=100), jit=False))
+    return _analyze_text(fn.lower(B_grid).compile().as_text())
+
+
 def main():
     op, b, _ = M.convection_diffusion(16, peclet=1.0)
     b_grid = b.reshape(16, 16, 16)
     from repro.core.compat import make_mesh
     mesh = make_mesh((8,), ("rows",))
+    m = 4
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
+    B_grid = jnp.stack([b] + [jax.random.normal(k, b.shape, b.dtype)
+                              for k in keys[1:]], axis=1).reshape(16, 16, 16, m)
     out = {
         "p-bicgsafe": analyze(pbicgsafe_solve, op, b_grid, mesh),
         "ssbicgsafe2": analyze(ssbicgsafe2_solve, op, b_grid, mesh),
+        "p-bicgsafe-batched": analyze_batched(op, B_grid, mesh),
     }
     print(json.dumps(out))
 

@@ -10,6 +10,13 @@ CONFIG = ModelConfig(
     qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
     moe_experts=256, moe_top_k=8, moe_shared_experts=1,
     moe_groups=256, moe_capacity_factor=1.25,
+    # DeepSeek-V3 "does not drop any tokens during training or inference"
+    # (arXiv:2412.19437 §3): route through the dropless sort dispatch.  The
+    # capacity-gather path makes expert assignment batch-competitive, so a
+    # token's FFN output depends on which other tokens share the batch —
+    # which breaks prefill/decode logit consistency (single-token decode
+    # never hits capacity; a 32-token prefill does).
+    moe_impl="sort",
     use_mtp=True, mtp_loss_weight=0.3,
     rope_theta=10_000.0,
 )

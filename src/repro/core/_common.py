@@ -23,6 +23,31 @@ Multi-RHS: every helper here is column-batched.  ``local_dots`` accepts
 column of dots per right-hand side, still one reduction), and
 ``bicgsafe_coefficients`` broadcasts elementwise over trailing RHS axes —
 this is what :func:`repro.core.multirhs.solve_batched` runs on.
+
+Supported path matrix (every cell runs the SAME iteration body; the
+substrate picks who computes the vector phases, the driver picks where):
+
+====================  =======================  ==========================
+scenario              ``substrate="jnp"``      ``substrate="pallas"``
+====================  =======================  ==========================
+single RHS            inline jnp ops           fused_dots / fused_axpy /
+                                               banded spmv_ell kernels
+batched (n, m)        jnp broadcasting         (n, m) block kernels:
+                                               fused_dots_batched,
+                                               fused_axpy_batched (with
+                                               the per-column convergence
+                                               mask in-kernel), block-ELL
+                                               spmv_ell_batched
+distributed           per-shard jnp + 1 psum   per-shard kernels + 1 psum
+batched+distributed   row-sharded (n, m),      row-sharded block kernels,
+                      1 psum of (9, m)/iter    1 psum of (9, m)/iter
+====================  =======================  ==========================
+
+(``distributed_stencil_solve`` / ``distributed_stencil_solve_batched`` in
+:mod:`repro.core.distributed`; the single psum per iteration and its
+independence from the in-flight matvec hold in every cell — asserted in
+tests/test_substrate_parity.py, tests/_distributed_check.py and
+benchmarks/bench_overlap.py.)
 """
 from __future__ import annotations
 

@@ -18,6 +18,14 @@ this is the "individual" blocked mode: convergence per column is
 identical to m independent solves in exact arithmetic, and columns that
 converge (or break down) early are frozen by masking while the rest
 continue.  ``benchmarks/bench_multirhs.py`` measures batched vs. looped.
+
+The whole hot loop routes through the compute substrate
+(:mod:`repro.core.substrate`): on ``substrate="pallas"`` the fused
+(9, m) dots, the (n, m) update phase (with the convergence mask applied
+in-kernel) and the block-ELL SpMV are the hand-tiled kernels, and on the
+distributed driver (:func:`repro.core.distributed
+.distributed_stencil_solve_batched`) the same iteration runs per shard
+with the (9, m) partial block reduced by ONE psum.
 """
 from __future__ import annotations
 
@@ -32,9 +40,24 @@ from .types import (DotReduce, SolveResult, SolverConfig, identity_reduce)
 
 
 def _masked(mask_cols, new, old):
-    """Per-column select: mask is (m,); operands are (m,) or (n, m)."""
-    if new.ndim == old.ndim + 1:      # pragma: no cover - defensive
-        raise ValueError("rank mismatch")
+    """Per-column select: mask is (m,); operands are (m,) or (n, m).
+
+    ``new`` may arrive with the trailing RHS axis squeezed away — e.g. a
+    user ``dot_reduce`` that collapses the degenerate ``(9, 1)`` partial
+    block to ``(9,)`` for m=1 turns every coefficient into a scalar.  Such
+    lower-rank ``new`` values are broadcast back up to ``old``'s shape
+    instead of raising: the state block's shape is authoritative.
+    """
+    if new.ndim < old.ndim and old.shape[-1] == 1:  # squeezed m=1 only
+        new = jnp.broadcast_to(
+            new.reshape(new.shape + (1,) * (old.ndim - new.ndim)),
+            old.shape)
+    elif new.ndim != old.ndim:
+        # m>1 stays a loud failure: a dot_reduce that collapses the RHS
+        # axis of a real block would otherwise broadcast one column's
+        # coefficients to all m
+        raise ValueError(
+            f"rank mismatch: new {new.shape} vs old {old.shape}")
     m = mask_cols if new.ndim == 1 else mask_cols[None, :]
     return jnp.where(m, new, old)
 
@@ -51,30 +74,39 @@ def solve_batched(matvec: Callable,
                   config: SolverConfig = SolverConfig(),
                   r0_star: Optional[jax.Array] = None,
                   dot_reduce: DotReduce = identity_reduce,
-                  substrate: SubstrateLike = "jnp") -> SolveResult:
+                  substrate: SubstrateLike = "jnp",
+                  blocked: bool = False) -> SolveResult:
     """Solve A X = B with p-BiCGSafe for all m columns of B at once.
 
     Args:
       matvec: single-vector matvec (n,) -> (n,); lifted to column blocks
-        with vmap.  May also be an operator accepted by the substrate.
+        by the substrate (vmap, or the block-ELL kernel for banded ELL
+        operators on the pallas substrate).  May also be an operator
+        accepted by the substrate.
       B: (n, m) right-hand sides.
       X0: optional (n, m) initial guesses.
       config/r0_star/dot_reduce/substrate: as for the single-RHS solvers;
         ``r0_star`` is a single (n,) shadow vector shared by all columns
         or an (n, m) block of per-column shadows.
+      blocked: the given ``matvec`` already maps (n, m) column blocks to
+        (n, m) — used by the distributed driver, whose halo-exchange
+        matvec streams whole blocks (one ppermute cascade for all m).
 
     Returns a :class:`SolveResult` with column-batched fields: ``x`` is
     (n, m); ``iterations``, ``relres``, ``converged``, ``breakdown`` are
     (m,); ``residual_history`` is (maxiter+1, m) when recorded.
 
     One ``dot_reduce`` call per iteration regardless of m (the (9, m)
-    partial block is one message), plus one for ||r_0||.
+    partial block is one message), plus one for ||r_0||.  The whole
+    per-iteration vector phase — fused dots, update phase, block SpMV —
+    runs through the substrate, so ``substrate="pallas"`` executes it on
+    the hand-tiled (n, m) kernels with the per-column convergence mask
+    applied in-kernel.
     """
     if B.ndim != 2:
         raise ValueError(f"B must be (n, m); got shape {B.shape}")
     sub = get_substrate(substrate)
-    mv = sub.as_matvec(matvec)
-    bmv = batched_matvec(mv)
+    bmv = matvec if blocked else sub.as_block_matvec(matvec)
     n, m = B.shape
     eps = config.breakdown_threshold(B.dtype)
 
@@ -123,12 +155,19 @@ def solve_batched(matvec: Callable,
         relres = jnp.sqrt(jnp.abs(rr)) / norm_r0
         done = relres <= config.tol
 
+        # Per-RHS freeze mask: only active-and-unfinished columns advance;
+        # converged / broken-down columns stay at their final state.
+        advance = active & ~done & ~bad               # (m,)
+
         # Blocked vector-update phase through the substrate (the (m,)
-        # coefficients broadcast over the (n, m) column blocks).
+        # coefficients broadcast over the (n, m) column blocks).  The
+        # convergence mask rides into the phase — on the pallas substrate
+        # frozen columns write their input tiles back inside the kernel,
+        # so no second (n, m) masking pass is needed for these outputs.
         upd = sub.axpy_phase(
             dict(r=r, p=st["p"], u=st["u"], t=t_prev, y=y, z=st["z"],
                  s=s, l=st["l"], g=st["g"], w=st["w"], x=st["x"], As=As),
-            (alpha, beta, zeta, eta))
+            (alpha, beta, zeta, eta), mask=advance)
         p, u, q, w, t = (upd[k] for k in ("p", "u", "q", "w", "t"))
         z, y_next, x_next, r_next = (
             upd[k] for k in ("z", "y", "x", "r"))
@@ -137,9 +176,8 @@ def solve_batched(matvec: Callable,
         l, g_next, s_next = pipelined_recurrence_tail(
             q, s, As, st["g"], Aw, alpha, zeta, eta)
 
-        # Per-RHS masking: only active-and-unfinished columns advance;
-        # converged / broken-down columns stay frozen at their final state.
-        advance = active & ~done & ~bad               # (m,)
+        # The recurrence tail (l, g, s) and the scalar carries have no
+        # in-kernel mask — freeze them here.
         upd = lambda new, old: _masked(advance, new, old)  # noqa: E731
         relres_out = _masked(active, relres, st["relres"])
         if config.record_history:
@@ -150,9 +188,8 @@ def solve_batched(matvec: Callable,
             hist_i = st["hist"]
 
         return dict(
-            x=upd(x_next, st["x"]), r=upd(r_next, r), s=upd(s_next, s),
-            p=upd(p, st["p"]), u=upd(u, st["u"]), t=upd(t, t_prev),
-            y=upd(y_next, y), z=upd(z, st["z"]), w=upd(w, st["w"]),
+            x=x_next, r=r_next, s=upd(s_next, s),
+            p=p, u=u, t=t, y=y_next, z=z, w=w,
             l=upd(l, st["l"]), g=upd(g_next, st["g"]),
             alpha=upd(alpha, st["alpha"]), zeta=upd(zeta, st["zeta"]),
             f=upd(f, st["f"]),

@@ -30,6 +30,17 @@ in tests/test_substrate_parity.py) and is reduced by the solver's single
 ``dot_reduce``/``psum``.  Multi-RHS blocks ``(n, m)`` flow through the same
 methods and produce ``(k, m)`` partial blocks — still ONE reduction.
 
+Every phase is column-batched on BOTH substrates: ``bicgsafe_dots``
+accepts ``(n, m)`` blocks (-> ``(9, m)`` partials), ``axpy_phase`` streams
+``(n, m)`` tiles with per-column ``(m,)`` coefficients and an optional
+per-column convergence ``mask`` (applied in-kernel on the pallas
+substrate), and :meth:`Substrate.as_block_matvec` lifts an operator to
+``(n, m) -> (n, m)`` column blocks — for banded ELL operators on the
+pallas substrate this is the block-ELL kernel, which reads the matrix
+tiles once for all m columns instead of m times.  ``solve_batched`` runs
+its entire hot loop through these, so single, batched, distributed, and
+batched+distributed solves all execute the same kernel bodies.
+
 Use ``substrate="pallas"`` (or a :class:`Substrate` instance) on any solver
 entry point; resolve names with :func:`get_substrate`.
 """
@@ -70,17 +81,32 @@ class Substrate:
         """
         raise NotImplementedError
 
-    def axpy_phase(self, vecs: dict, scalars) -> dict:
+    def axpy_phase(self, vecs: dict, scalars, mask=None) -> dict:
         """p-BiCGSafe's blocked vector-update phase (Alg. 3.1 lines 23-32).
 
         vecs: dict with r,p,u,t,y,z,s,l,g,w,x,As; scalars: (alpha, beta,
         zeta, eta).  Returns dict with the primed p,o,u,q,w,t,z,y,x,r.
+
+        Multi-RHS: ``(n, m)`` blocks with ``(m,)`` per-column scalars, and
+        an optional ``(m,)`` bool ``mask`` — frozen (mask=False) columns
+        keep their input values for every output with same-named state.
         """
         raise NotImplementedError
 
     def as_matvec(self, op):
         """Operator / matrix / callable -> matvec callable."""
         return linear_operator.as_matvec(op)
+
+    def as_block_matvec(self, op):
+        """Operator -> column-blocked matvec ``(n, m) -> (n, m)``.
+
+        Default: vmap the single-vector matvec over columns
+        (:func:`repro.core.multirhs.batched_matvec` — the canonical
+        lift).  Substrates with a dedicated block SpMV kernel override
+        this so the matrix is streamed once for all m right-hand sides.
+        """
+        from .multirhs import batched_matvec   # lazy: multirhs imports us
+        return batched_matvec(self.as_matvec(op))
 
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"
@@ -98,9 +124,9 @@ class JnpSubstrate(Substrate):
         v = dict(s=s, y=y, r=r, t=t_prev, rs=rs)
         return local_dots([(v[a], v[b]) for a, b in BICGSAFE_DOT_PAIRS])
 
-    def axpy_phase(self, vecs, scalars):
+    def axpy_phase(self, vecs, scalars, mask=None):
         from repro.kernels import ref
-        return ref.fused_axpy(vecs, scalars)
+        return ref.fused_axpy(vecs, scalars, mask=mask)
 
 
 class PallasSubstrate(Substrate):
@@ -122,12 +148,9 @@ class PallasSubstrate(Substrate):
         from repro.kernels import ops
         return ops.fused_dots(s, y, r, t_prev, rs)
 
-    def axpy_phase(self, vecs, scalars):
+    def axpy_phase(self, vecs, scalars, mask=None):
         from repro.kernels import ops
-        if vecs["r"].ndim != 1:       # no batched axpy kernel (yet)
-            from repro.kernels import ref
-            return ref.fused_axpy(vecs, scalars)
-        return ops.fused_axpy(vecs, scalars)
+        return ops.fused_axpy(vecs, scalars, mask=mask)
 
     def as_matvec(self, op):
         from repro.kernels import ops
@@ -135,6 +158,16 @@ class PallasSubstrate(Substrate):
                 and ops.ell_is_banded(op):
             return functools.partial(ops.spmv_ell, op)
         return linear_operator.as_matvec(op)
+
+    def as_block_matvec(self, op):
+        from repro.kernels import ops
+        if isinstance(op, linear_operator.ELLOperator) \
+                and ops.ell_is_banded(op):
+            # ops.spmv_ell handles (n, m) via the block kernel directly —
+            # NOT a vmap of the 1-D kernel, which would re-read values/cols
+            # once per column
+            return functools.partial(ops.spmv_ell, op)
+        return super().as_block_matvec(op)
 
 
 SUBSTRATES = {

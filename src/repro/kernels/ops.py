@@ -9,10 +9,14 @@ These ops are the backing store of the ``"pallas"`` compute substrate
 (:mod:`repro.core.substrate`): the solver hot loop calls ``fused_dots`` /
 ``fused_axpy`` / ``spmv_ell`` through the substrate object rather than
 inlining jnp, so the same iteration body runs against either the reference
-jnp path or these kernels.  ``fused_dots`` accepts both single-RHS ``(n,)``
-vectors (9 partials) and multi-RHS ``(n, m)`` blocks ((9, m) partials) —
-in both cases the result is reduced by the solver's single ``psum``, which
-is what keeps the synchronization count at one regardless of m.
+jnp path or these kernels.  ``fused_dots``, ``fused_axpy`` and
+``spmv_ell`` all accept both single-RHS ``(n,)`` vectors and multi-RHS
+``(n, m)`` blocks: the block variants stream ``(n, m)`` tiles with
+per-column coefficients (``fused_axpy`` additionally applies the
+per-column convergence mask in-kernel) and amortize the matrix/index
+loads of the SpMV over all m columns.  In every case the dot partials are
+reduced by the solver's single ``psum``, which is what keeps the
+synchronization count at one regardless of m.
 """
 from __future__ import annotations
 
@@ -25,9 +29,9 @@ import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention_pallas
-from .fused_axpy import fused_axpy_pallas
+from .fused_axpy import fused_axpy_batched_pallas, fused_axpy_pallas
 from .fused_dots import fused_dots_batched_pallas, fused_dots_pallas
-from .spmv_ell import spmv_ell_pallas
+from .spmv_ell import spmv_ell_batched_pallas, spmv_ell_pallas
 
 
 def _interpret() -> bool:
@@ -48,11 +52,16 @@ def fused_dots(s, y, r, t, rs) -> jax.Array:
 
 def spmv_ell(op, x) -> jax.Array:
     """Banded ELL SpMV via the Pallas kernel; falls back to the jnp path
-    when the band assumption does not hold."""
+    when the band assumption does not hold.  ``x`` may be an ``(n, m)``
+    multi-RHS block — the block kernel reads the matrix tiles once for all
+    m columns."""
     from repro.core.linear_operator import ELLOperator
     assert isinstance(op, ELLOperator)
     if not ell_is_banded(op):
         return ref.spmv_ell(op.values, op.cols, x)
+    if x.ndim == 2:
+        return spmv_ell_batched_pallas(op.values, op.cols, x,
+                                       interpret=_interpret())
     return spmv_ell_pallas(op.values, op.cols, x, interpret=_interpret())
 
 
@@ -69,8 +78,17 @@ def ell_is_banded(op, block_rows: int = 512) -> bool:
     return bool(band < block_rows)
 
 
-def fused_axpy(vecs: Dict[str, jax.Array], scalars) -> Dict[str, jax.Array]:
-    """p-BiCGSafe fused vector-update phase (Alg. 3.1 lines 23-32)."""
+def fused_axpy(vecs: Dict[str, jax.Array], scalars,
+               mask=None) -> Dict[str, jax.Array]:
+    """p-BiCGSafe fused vector-update phase (Alg. 3.1 lines 23-32).
+
+    ``(n,)`` vectors dispatch to the single-RHS kernel; ``(n, m)`` blocks
+    to the batched kernel with per-column ``(m,)`` coefficients and the
+    optional ``(m,)`` convergence ``mask`` applied in-kernel."""
+    if vecs["r"].ndim == 2:
+        return fused_axpy_batched_pallas(vecs, scalars, mask,
+                                         interpret=_interpret())
+    assert mask is None, "mask is a multi-RHS (column) concept"
     return fused_axpy_pallas(vecs, scalars, interpret=_interpret())
 
 

@@ -29,15 +29,27 @@ def fused_dots_batched(s, y, r, t, rs) -> jax.Array:
 
 
 def spmv_ell(values, cols, x) -> jax.Array:
-    """ELLPACK SpMV: y[i] = sum_j values[i,j] * x[cols[i,j]]."""
+    """ELLPACK SpMV: y[i] = sum_j values[i,j] * x[cols[i,j]].
+
+    ``x`` may be an (n, m) multi-RHS block: each column is multiplied
+    independently (the oracle of the block-ELL kernel).
+    """
+    if x.ndim == 2:
+        return jnp.einsum("rk,rkm->rm", values, x[cols])
     return jnp.sum(values * x[cols], axis=1)
 
 
-def fused_axpy(vecs, scalars):
+def fused_axpy(vecs, scalars, mask=None):
     """The fused vector-update phase of p-BiCGSafe (Alg. 3.1 lines 23-32).
 
     vecs: dict with r,p,u,t,y,z,s,l,g,w,x,As   scalars: (alpha,beta,zeta,eta)
     Returns dict with p,o,u,q,w,t,z,y,x,r (primed values).
+
+    Column-batched: (n, m) blocks with (m,) per-column scalars broadcast.
+    ``mask`` (optional (m,) bool, multi-RHS only): frozen columns
+    (mask == False) keep their INPUT values for every output that has a
+    same-named input (p,u,w,t,z,y,x,r); ``o``/``q`` are always fresh (no
+    old state exists — the solver masks their consumers instead).
     """
     al, be, ze, et = scalars
     r, p, u, t, y, z = (vecs[k] for k in "rputyz")
@@ -52,8 +64,14 @@ def fused_axpy(vecs, scalars):
     y2 = ze * s + et * y - al * w2
     x2 = x + al * p2 + z2
     r2 = r - al * o - y2
-    return {"p": p2, "o": o, "u": u2, "q": q, "w": w2, "t": t2,
-            "z": z2, "y": y2, "x": x2, "r": r2}
+    out = {"p": p2, "o": o, "u": u2, "q": q, "w": w2, "t": t2,
+           "z": z2, "y": y2, "x": x2, "r": r2}
+    if mask is not None:
+        from .fused_axpy import MASKED_OUT
+        mk = mask[None, :] if out["r"].ndim == 2 else mask
+        for k in MASKED_OUT:
+            out[k] = jnp.where(mk, out[k], vecs[k])
+    return out
 
 
 def flash_attention(q, k, v, scale: float, causal: bool = True) -> jax.Array:

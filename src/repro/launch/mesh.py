@@ -35,3 +35,13 @@ def make_solver_mesh(n_devices: int | None = None, *,
         d = n // m
         shape = (d, m)
     return make_mesh(shape, axes[:len(shape)])
+
+
+def make_multirhs_mesh(n_devices: int | None = None):
+    """Mesh for sharded batched (multi-RHS) solves: one flat ``rows`` axis
+    over all devices.  The (n, m) block is row-sharded over it while the m
+    columns stay local to every shard, so the batched solver's single
+    (9, m) psum reduces over exactly this axis
+    (:func:`repro.core.distributed.distributed_stencil_solve_batched`)."""
+    n = n_devices or jax.device_count()
+    return make_mesh((n,), ("rows",))

@@ -174,7 +174,9 @@ def _moe_sort(p, xf, probs, experts, cfg: ModelConfig):
         yo = jax.lax.ragged_dot(jax.nn.silu(g) * h,
                                 p["wo"].astype(xf.dtype), group_sizes)
     else:  # pragma: no cover - fallback for jax without ragged_dot
-        seg = jnp.repeat(jnp.arange(E), N * k // E, total_repeat_length=N * k)
+        # per-row expert id of the SORTED stream (group sizes are ragged;
+        # an even split would pair tokens with the wrong expert weights)
+        seg = expert_flat[order]
         h = jnp.einsum("nd,ndf->nf", xin,
                        p["wi"].astype(xf.dtype)[seg])
         g = jnp.einsum("nd,ndf->nf", xin, p["wg"].astype(xf.dtype)[seg])

@@ -60,7 +60,13 @@ def make_ggn_matvec(loss_logits_fn: Callable, params, batch,
         _, jv = jax.jvp(logits_of, (flat0,), (v,))          # (B..., V)
         logits = logits_of(flat0)
         p = jax.nn.softmax(logits.astype(acc_dtype), axis=-1)
-        hjv = p * jv.astype(jnp.float32)
+        # Accumulate the CE-Hessian product in acc_dtype (f64 when the
+        # params are f64).  Downcasting jv to f32 here makes the operator
+        # nonlinear at the f32 rounding level, which silently breaks
+        # p-BiCGSafe's recurrences (q_i = A s_i + beta l_{i-1} etc. assume
+        # an exactly linear A): the recurred residual converges while the
+        # true residual stalls O(1), and every Newton direction is garbage.
+        hjv = p * jv.astype(acc_dtype)
         hjv = hjv - p * jnp.sum(hjv, axis=-1, keepdims=True)
         n_rows = hjv.size // hjv.shape[-1]
         hjv = (hjv / n_rows).astype(jv.dtype)

@@ -1,0 +1,45 @@
+"""Shared jaxpr-walking helpers for the structural communication tests
+(tests/test_substrate_parity.py and tests/_distributed_check.py)."""
+import jax
+
+
+def subjaxprs(eqn):
+    """Yield every sub-jaxpr referenced by an equation's params."""
+    for v in eqn.params.values():
+        for sub in (v if isinstance(v, (list, tuple)) else [v]):
+            j = getattr(sub, "jaxpr", sub)
+            if isinstance(j, jax.core.Jaxpr):
+                yield j
+
+
+def find_while_body(jaxpr):
+    """First while-loop body jaxpr, searching nested jaxprs depth-first."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "while":
+            return eqn.params["body_jaxpr"].jaxpr
+        for sub in subjaxprs(eqn):
+            found = find_while_body(sub)
+            if found is not None:
+                return found
+    return None
+
+
+def count_prim(jaxpr, name):
+    """Occurrences of a primitive in a jaxpr, including nested jaxprs."""
+    cnt = sum(1 for eqn in jaxpr.eqns if eqn.primitive.name == name)
+    for eqn in jaxpr.eqns:
+        for sub in subjaxprs(eqn):
+            cnt += count_prim(sub, name)
+    return cnt
+
+
+def find_prim_eqn(jaxpr, name):
+    """First equation of the given primitive, searching nested jaxprs."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            return eqn
+        for sub in subjaxprs(eqn):
+            found = find_prim_eqn(sub, name)
+            if found is not None:
+                return found
+    return None

@@ -10,10 +10,12 @@ from repro.core.linear_operator import ELLOperator
 from repro.core import matrices as M
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.fused_axpy import IN_ORDER, fused_axpy_pallas
+from repro.kernels.fused_axpy import (IN_ORDER, fused_axpy_batched_pallas,
+                                      fused_axpy_pallas)
 from repro.kernels.fused_dots import (fused_dots_batched_pallas,
                                       fused_dots_pallas)
-from repro.kernels.spmv_ell import spmv_ell_pallas
+from repro.kernels.spmv_ell import (spmv_ell_batched_pallas,
+                                    spmv_ell_pallas)
 
 
 def rand(key, shape, dtype):
@@ -94,6 +96,84 @@ def test_fused_axpy(n, dtype):
             np.testing.assert_allclose(
                 np.asarray(got[k]), np.asarray(want[k]),
                 rtol=5e-5, atol=1e-5, err_msg=k)
+
+
+@pytest.mark.parametrize("n,m", [(100, 1), (1000, 7), (513, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_axpy_batched(n, m, dtype):
+    """Multi-RHS update-phase kernel: (n, m) blocks with per-column
+    coefficients, incl. lane padding (m=7, 130) and row padding (n=513)."""
+    with enable_x64(dtype == jnp.float64):
+        keys = jax.random.split(jax.random.PRNGKey(1), len(IN_ORDER) + 4)
+        vecs = {k: rand(kk, (n, m), dtype)
+                for k, kk in zip(IN_ORDER, keys)}
+        scalars = tuple(rand(kk, (m,), dtype)
+                        for kk in keys[len(IN_ORDER):])
+        got = fused_axpy_batched_pallas(vecs, scalars, interpret=True)
+        want = ref.fused_axpy(vecs, scalars)
+        for k in got:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(want[k]),
+                rtol=5e-5, atol=1e-5, err_msg=k)
+        # column 0 of the batched kernel == the 1-D kernel on column 0
+        col = {k: v[:, 0] for k, v in vecs.items()}
+        got0 = fused_axpy_pallas(col, tuple(s[0] for s in scalars),
+                                 interpret=True)
+        for k in got0:
+            np.testing.assert_allclose(
+                np.asarray(got[k][:, 0]), np.asarray(got0[k]),
+                rtol=5e-5, atol=1e-5, err_msg=k)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_axpy_batched_mask_freezes_columns(dtype):
+    """The in-kernel convergence mask: frozen columns return their INPUT
+    tiles bitwise for every state output; o/q stay fresh."""
+    from repro.kernels.fused_axpy import MASKED_OUT
+    with enable_x64(dtype == jnp.float64):
+        n, m = 300, 5
+        keys = jax.random.split(jax.random.PRNGKey(2), len(IN_ORDER) + 4)
+        vecs = {k: rand(kk, (n, m), dtype)
+                for k, kk in zip(IN_ORDER, keys)}
+        scalars = tuple(rand(kk, (m,), dtype)
+                        for kk in keys[len(IN_ORDER):])
+        mask = jnp.asarray([True, False, True, False, False])
+        got = fused_axpy_batched_pallas(vecs, scalars, mask, interpret=True)
+        want = ref.fused_axpy(vecs, scalars, mask=mask)
+        frozen = ~np.asarray(mask)
+        for k in got:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(want[k]),
+                rtol=5e-5, atol=1e-5, err_msg=k)
+            if k in MASKED_OUT:
+                np.testing.assert_array_equal(
+                    np.asarray(got[k])[:, frozen],
+                    np.asarray(vecs[k])[:, frozen], err_msg=k)
+
+
+@pytest.mark.parametrize("n,m", [(512, 1), (1030, 4), (4096, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_spmv_ell_batched(n, m, dtype):
+    """Block banded ELL SpMV: matrix tiles amortized over m columns."""
+    with enable_x64(dtype == jnp.float64):
+        rng = np.random.default_rng(0)
+        k = 5
+        offs = np.array([-2, -1, 0, 1, 2])
+        cols = np.clip(np.arange(n)[:, None] + offs[None, :], 0, n - 1)
+        vals = rng.standard_normal((n, k))
+        vals[cols == np.arange(n)[:, None]] += 3.0
+        values = jnp.asarray(vals, dtype)
+        cols = jnp.asarray(cols, np.int32)
+        x = rand(jax.random.PRNGKey(2), (n, m), dtype)
+        got = spmv_ell_batched_pallas(values, cols, x, interpret=True)
+        want = ref.spmv_ell(values, cols, x)
+        assert got.shape == (n, m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+        # column j == the 1-D kernel on column j
+        col0 = spmv_ell_pallas(values, cols, x[:, 0], interpret=True)
+        np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(col0),
+                                   rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("shape", [

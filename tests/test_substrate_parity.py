@@ -6,6 +6,9 @@ import numpy as np
 import pytest
 from jax import lax
 
+from _jaxpr_utils import (count_prim as _count_prim,
+                          find_prim_eqn as _find_prim_eqn,
+                          find_while_body as _find_while_body)
 from conftest import enable_x64
 from repro.core import (SOLVERS, SolverConfig, get_substrate, pbicgsafe_solve,
                         solve_batched, ssbicgsafe2_solve)
@@ -118,10 +121,9 @@ def test_sync_count_per_substrate(x64, substrate, sname, per_iter):
 
 
 def _while_body(jaxpr):
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "while":
-            return eqn.params["body_jaxpr"].jaxpr
-    raise AssertionError("no while_loop in solver jaxpr")
+    body = _find_while_body(jaxpr)
+    assert body is not None, "no while_loop in solver jaxpr"
+    return body
 
 
 def _reduction_sees_matvec(solve, op, b, substrate) -> bool:
@@ -131,20 +133,31 @@ def _reduction_sees_matvec(solve, op, b, substrate) -> bool:
     ``optimization_barrier``; in the while-body jaxpr we then check whether
     the reduction's tag is transitively computed from the matvec's tag.
     False == no dependency edge == the reduction may overlap the matvec.
+
+    Works for the single-RHS solvers ((9,) partials) and for
+    ``solve_batched`` ((9, m) partial blocks; ``b`` is then (n, m), and
+    the tag wraps the block matvec — optimization_barrier has no vmap
+    batching rule, so the barrier must sit outside the column lift).
     """
-    mv = lambda x: lax.optimization_barrier(op.matvec(x))  # noqa: E731
     spy = lax.optimization_barrier
+    if b.ndim == 2:
+        base = jax.vmap(op.matvec, in_axes=1, out_axes=1)
+        mv = lambda x: lax.optimization_barrier(base(x))   # noqa: E731
+        solve_kw = {"blocked": True}
+    else:
+        mv = lambda x: lax.optimization_barrier(op.matvec(x))  # noqa: E731
+        solve_kw = {}
 
     jaxpr = jax.make_jaxpr(lambda bb: solve(
         mv, bb, config=SolverConfig(maxiter=10), dot_reduce=spy,
-        substrate=substrate))(b)
+        substrate=substrate, **solve_kw))(b)
     body = _while_body(jaxpr.jaxpr)
 
     dot_eqn, mv_outs = None, set()
     for eqn in body.eqns:
         if eqn.primitive.name != "optimization_barrier":
             continue
-        if eqn.outvars[0].aval.shape == (9,):
+        if eqn.outvars[0].aval.shape[:1] == (9,):
             dot_eqn = eqn
         else:
             mv_outs.update(eqn.outvars)
@@ -171,6 +184,47 @@ def test_overlap_edge_survives_substrate_refactor(x64, substrate):
     op, b, _ = M.nonsym_dense(64)
     assert not _reduction_sees_matvec(pbicgsafe_solve, op, b, substrate)
     assert _reduction_sees_matvec(ssbicgsafe2_solve, op, b, substrate)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_overlap_edge_survives_batching(x64, substrate):
+    """The (9, m) fused block reduction of solve_batched still has no
+    dependency path from the in-flight BLOCK matvec — batching the
+    reduction must not serialize it behind the SpMV, on either substrate."""
+    op, b, _ = M.nonsym_dense(64)
+    B = jnp.stack([b, 0.5 * b, b + 1.0], axis=1)
+    assert not _reduction_sees_matvec(solve_batched, op, B, substrate)
+
+
+# ---------------------------------------------------------------------------
+# sharded batched solve: one psum/iter, no edge to the halo exchange
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("m", [1, 4])
+def test_sharded_batched_single_psum_per_iter(x64, substrate, m):
+    """The sharded batched solve lowers to EXACTLY ONE psum per iteration
+    — the (9, m) block — for any m and either substrate (the paper's
+    one-synchronization property).  A 1-device mesh suffices for the
+    count (the psum is mesh-size independent); the multi-device halo /
+    dependency-edge structure is asserted in tests/_distributed_check.py
+    and benchmarks/bench_overlap.py on 8 fake devices."""
+    from repro.core.compat import make_mesh
+    from repro.core.distributed import distributed_stencil_solve_batched
+
+    op, b, _ = M.convection_diffusion(8, peclet=1.0)
+    B_grid = jnp.stack([b * (j + 1) for j in range(m)],
+                       axis=1).reshape(8, 8, 8, m)
+    mesh = make_mesh((1,), ("rows",))
+    jaxpr = jax.make_jaxpr(lambda BB: distributed_stencil_solve_batched(
+        op, BB, mesh, config=SolverConfig(maxiter=10),
+        substrate=substrate, jit=False))(B_grid)
+    body = _find_while_body(jaxpr.jaxpr)
+    assert body is not None, "no while loop in the sharded batched solve"
+    assert _count_prim(body, "psum") == 1, "must be ONE reduction/iter"
+    psum_eqn = _find_prim_eqn(body, "psum")
+    assert psum_eqn.invars[0].aval.shape == (9, m), \
+        "the one reduction must carry the whole (9, m) partial block"
 
 
 # ---------------------------------------------------------------------------
@@ -229,19 +283,76 @@ def test_batched_reduction_is_one_9xm_block(x64):
     assert sizes[1] == (9, m)     # the fused phase, all m systems at once
 
 
-def test_batched_per_rhs_masking(x64):
-    """Columns converge at their own iteration; early columns freeze."""
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_batched_per_rhs_masking(x64, substrate):
+    """Columns converge at their own iteration; early columns freeze (on
+    the pallas substrate the freeze happens in-kernel via the convergence
+    mask the update-phase kernel consumes)."""
     op, b, _ = M.poisson3d(8)
     # power-of-two scaling keeps the fp trajectory bitwise identical
     B = jnp.stack([b, (2.0 ** -20) * b, jax.random.normal(
         jax.random.PRNGKey(0), b.shape, b.dtype)], axis=1)
     cfg = SolverConfig(tol=1e-8, maxiter=2000)
-    res = solve_batched(op.matvec, B, config=cfg)
+    res = solve_batched(op.matvec, B, config=cfg, substrate=substrate)
     iters = np.asarray(res.iterations)
     assert bool(np.asarray(res.converged).all())
     # scaled column converges in the same iterations as its parent
     assert iters[1] == iters[0]
     assert np.asarray(res.relres).max() <= 1e-8
+
+
+def test_batched_pallas_jnp_parity_per_column(x64):
+    """solve_batched(substrate="pallas") == substrate="jnp" column by
+    column: same per-column iteration counts and fp64-tolerance iterates
+    (interpret mode on CPU runs the same kernel bodies as TPU)."""
+    op, b, _ = M.convection_diffusion(10, peclet=1.0)
+    B = _rhs_block(b, 4)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    r_jnp = solve_batched(op.matvec, B, config=cfg, substrate="jnp")
+    r_pal = solve_batched(op.matvec, B, config=cfg, substrate="pallas")
+    assert bool(np.asarray(r_jnp.converged).all())
+    assert bool(np.asarray(r_pal.converged).all())
+    for j in range(B.shape[1]):
+        assert int(r_jnp.iterations[j]) == int(r_pal.iterations[j]), (
+            f"column {j}: substrate changed the iteration count")
+        np.testing.assert_allclose(
+            np.asarray(r_pal.x[:, j]), np.asarray(r_jnp.x[:, j]),
+            rtol=1e-6, atol=1e-8, err_msg=f"column {j}")
+    # relres sits at ~tol where block-wise vs pairwise summation order is
+    # visible; the iterates themselves are asserted tight above
+    np.testing.assert_allclose(np.asarray(r_pal.relres),
+                               np.asarray(r_jnp.relres),
+                               rtol=5e-2, atol=1e-10)
+
+
+def test_batched_pallas_block_ell_spmv(x64):
+    """A banded ELLOperator handed to solve_batched on the pallas
+    substrate routes through the BLOCK ELL kernel (matrix tiles read once
+    for all m columns) and reproduces the jnp path."""
+    n, m = 1024, 3
+    rng = np.random.default_rng(0)
+    offs = np.array([-2, -1, 0, 1, 2])
+    cols = np.clip(np.arange(n)[:, None] + offs[None, :], 0, n - 1)
+    vals = rng.standard_normal((n, 5))
+    vals[:, 2] = 1.0 + 1.2 * np.abs(vals).sum(axis=1)
+    from repro.core import ELLOperator, get_substrate
+    ell = ELLOperator(jnp.asarray(vals), jnp.asarray(cols, np.int32), n)
+
+    # dispatch check: the block matvec is the kernel, not a vmap
+    bmv = get_substrate("pallas").as_block_matvec(ell)
+    X = jnp.asarray(rng.standard_normal((n, m)))
+    np.testing.assert_allclose(np.asarray(bmv(X)),
+                               np.stack([np.asarray(ell.matvec(X[:, j]))
+                                         for j in range(m)], axis=1),
+                               rtol=1e-10)
+
+    Xt = jnp.ones((n, m), jnp.float64) * jnp.arange(1., m + 1.)
+    B = bmv(Xt)
+    res = solve_batched(ell, B, config=SolverConfig(tol=1e-10),
+                        substrate="pallas")
+    assert bool(np.asarray(res.converged).all())
+    err = float(jnp.linalg.norm(res.x - Xt) / jnp.linalg.norm(Xt))
+    assert err < 1e-7
 
 
 def test_batched_history_and_x0(x64):
@@ -263,3 +374,48 @@ def test_batched_rejects_1d_rhs(x64):
     op, b, _ = M.poisson3d(8)
     with pytest.raises(ValueError, match=r"\(n, m\)"):
         solve_batched(op.matvec, b)
+
+
+def test_masked_normalizes_m1_degenerate_shapes(x64):
+    """multirhs._masked accepts coefficients whose trailing m=1 axis was
+    squeezed away (e.g. by a dot_reduce that collapses the (9, 1) partial
+    block to (9,)) instead of raising / producing mis-shaped state."""
+    from repro.core.multirhs import _masked
+    mask = jnp.asarray([True])
+    # scalar new vs (1,) old — the squeezed-coefficient case
+    out = _masked(mask, jnp.asarray(2.0), jnp.asarray([1.0]))
+    assert out.shape == (1,) and float(out[0]) == 2.0
+    # (n,) new vs (n, 1) old
+    out = _masked(jnp.asarray([False]), jnp.arange(4.0),
+                  jnp.zeros((4, 1)))
+    assert out.shape == (4, 1)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 1)))
+    # matching ranks stay the fast path
+    out = _masked(jnp.asarray([True, False]), jnp.ones((3, 2)),
+                  jnp.zeros((3, 2)))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.stack([np.ones(3), np.zeros(3)], 1))
+    # m>1 rank collapse stays a LOUD failure (a dot_reduce that sums away
+    # a real RHS axis must not silently broadcast one column to all m)
+    with pytest.raises(ValueError, match="rank mismatch"):
+        _masked(jnp.asarray([True, True]), jnp.ones(()), jnp.zeros((2,)))
+
+
+def test_batched_m1_with_squeezing_dot_reduce(x64):
+    """End-to-end m=1 regression: a dot_reduce that squeezes the
+    degenerate RHS axis (returning (9,) for the (9, 1) block) must still
+    solve — this was reachable and raised the _masked rank check."""
+    op, b, xt = M.poisson3d(8)
+    B = b[:, None]
+
+    def squeezing_reduce(partials):
+        return partials.reshape(partials.shape[0])   # (k, 1) -> (k,)
+
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    res = solve_batched(op.matvec, B, config=cfg,
+                        dot_reduce=squeezing_reduce)
+    assert bool(np.asarray(res.converged).all())
+    ref = solve_batched(op.matvec, B, config=cfg)
+    assert int(res.iterations[0]) == int(ref.iterations[0])
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(ref.x),
+                               rtol=1e-10, atol=1e-12)

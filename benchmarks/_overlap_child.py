@@ -51,9 +51,10 @@ def _analyze_text(text):
     }
 
 
-def analyze(solver, op, b_grid, mesh):
+def analyze(solver, op, b_grid, mesh, precond=None):
     fn = jax.jit(lambda b: distributed_stencil_solve(
-        solver, op, b, mesh, config=SolverConfig(maxiter=100), jit=False))
+        solver, op, b, mesh, config=SolverConfig(maxiter=100),
+        precond=precond, jit=False))
     return _analyze_text(fn.lower(b_grid).compile().as_text())
 
 
@@ -79,6 +80,12 @@ def main():
         "p-bicgsafe": analyze(pbicgsafe_solve, op, b_grid, mesh),
         "ssbicgsafe2": analyze(ssbicgsafe2_solve, op, b_grid, mesh),
         "p-bicgsafe-batched": analyze_batched(op, B_grid, mesh),
+        # preconditioned pipelined solve: the shard-local block-Jacobi
+        # M^{-1}-apply joins the in-flight matvec inside the overlap
+        # window — the all-reduce must STILL not depend on any halo
+        # permute (reduction_needs_permutes == 0)
+        "p-bicgsafe-block-jacobi": analyze(pbicgsafe_solve, op, b_grid,
+                                           mesh, precond="block_jacobi"),
     }
     print(json.dumps(out))
 

@@ -119,6 +119,12 @@ def run(quick: bool = False):
                   and batched.get("reduction_needs_permutes", 1) == 0)
     print(f"overlap survives batching+sharding (the (9, m) block "
           f"all-reduce has no edge to the block matvec): {ok_batched}")
+    prec = proof.get("p-bicgsafe-block-jacobi", {})
+    ok_prec = ("error" not in proof
+               and prec.get("independent_of_reduction", 0) > 0
+               and prec.get("reduction_needs_permutes", 1) == 0)
+    print(f"overlap survives preconditioning (block-Jacobi apply inside "
+          f"the window, no edge from the reduction): {ok_prec}")
 
     rows = latency_model()
     headers = ["chips", "t_reduce us", "t_spmv us", "t_ss us", "t_p us",
@@ -127,7 +133,8 @@ def run(quick: bool = False):
     write_json("bench_overlap.json",
                {"hlo_proof": proof, "model": {"headers": headers,
                                               "rows": rows},
-                "claim_ok": bool(ok), "batched_claim_ok": bool(ok_batched)})
+                "claim_ok": bool(ok), "batched_claim_ok": bool(ok_batched),
+                "precond_claim_ok": bool(ok_prec)})
     return proof
 
 

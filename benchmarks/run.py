@@ -9,6 +9,7 @@
   bench_scaling       Fig 5.3 companion    (measured per-iter work)
   bench_roofline      §Roofline            (terms from dry-run artifacts)
   bench_multirhs      multi-RHS            (batched vs looped solves)
+  bench_precond       preconditioning      (precond vs not, per solver)
 
 Artifacts land in experiments/*.json; stdout is the human summary.
 """
@@ -29,7 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_convergence, bench_cost, bench_multirhs,
-                   bench_overlap, bench_roofline, bench_rr, bench_scaling)
+                   bench_overlap, bench_precond, bench_roofline, bench_rr,
+                   bench_scaling)
 
     benches = {
         "convergence": bench_convergence.run,
@@ -39,6 +41,7 @@ def main() -> None:
         "scaling": bench_scaling.run,
         "roofline": bench_roofline.run,
         "multirhs": bench_multirhs.run,
+        "precond": bench_precond.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -9,7 +9,7 @@ Public API:
   - :func:`ssbicgsafe2_solve`     ssBiCGSafe2         (Alg. 2.3, 1 sync)
   - :func:`pbicgsafe_solve`       p-BiCGSafe          (Alg. 3.1, 1 overlapped sync)
   - :func:`pbicgsafe_rr_solve`    p-BiCGSafe-rr       (Alg. 4.1)
-* Operators: Dense/CSR/ELL/Stencil7 + Jacobi preconditioner.
+* Operators: Dense/CSR/ELL/Stencil7.
 * Problem generators: :mod:`repro.core.matrices`.
 * Distributed driver: :mod:`repro.core.distributed`.
 * Compute substrates: every solver takes ``substrate="jnp"|"pallas"``
@@ -17,11 +17,22 @@ Public API:
   vector-update / SpMV phases of the hot loop.
 * Multi-RHS: :func:`solve_batched` solves ``A X = B`` for ``(n, m)``
   right-hand sides with per-RHS convergence, one reduction per iteration.
+* Preconditioning: every solver entry point (including the batched and
+  distributed drivers) takes ``precond=`` — a name or a
+  :class:`repro.precond.Preconditioner` (Jacobi / block-Jacobi / Neumann
+  polynomial / SSOR) — running the left-preconditioned system with the
+  M^{-1}-apply routed through the substrate and, for the pipelined
+  solvers, scheduled inside the overlap window of the single reduction
+  (:mod:`repro.precond`).
 """
+from repro.precond import (BlockJacobiPreconditioner, JacobiPreconditioner,
+                           NeumannPreconditioner, Preconditioner,
+                           SSORPreconditioner, block_jacobi, jacobi, neumann,
+                           ssor)
 from .types import SolveResult, SolverConfig, identity_reduce
 from .linear_operator import (CSROperator, DenseOperator, ELLOperator,
-                              JacobiPreconditioner, Stencil7Operator,
-                              as_matvec, preconditioned_matvec)
+                              Stencil7Operator, as_matvec,
+                              preconditioned_matvec)
 from .substrate import (SUBSTRATES, JnpSubstrate, PallasSubstrate, Substrate,
                         get_substrate)
 from .bicgstab import bicgstab_solve
@@ -44,8 +55,11 @@ SOLVERS = {
 
 __all__ = [
     "SolveResult", "SolverConfig", "identity_reduce",
-    "CSROperator", "DenseOperator", "ELLOperator", "JacobiPreconditioner",
+    "CSROperator", "DenseOperator", "ELLOperator",
     "Stencil7Operator", "as_matvec", "preconditioned_matvec",
+    "Preconditioner", "JacobiPreconditioner", "BlockJacobiPreconditioner",
+    "NeumannPreconditioner", "SSORPreconditioner",
+    "jacobi", "block_jacobi", "neumann", "ssor",
     "Substrate", "JnpSubstrate", "PallasSubstrate", "SUBSTRATES",
     "get_substrate",
     "bicgstab_solve", "pbicgstab_solve", "gpbicg_solve",

@@ -48,6 +48,34 @@ batched+distributed   row-sharded (n, m),      row-sharded block kernels,
 independence from the in-flight matvec hold in every cell — asserted in
 tests/test_substrate_parity.py, tests/_distributed_check.py and
 benchmarks/bench_overlap.py.)
+
+Preconditioning (the ``precond=`` column of every cell above; see
+:mod:`repro.precond`) — how each M^{-1}-apply executes per substrate,
+and its distributed locality:
+
+==============  ==========================  =======================  ============
+preconditioner  ``substrate="jnp"``         ``substrate="pallas"``   distributed
+==============  ==========================  =======================  ============
+jacobi          elementwise jnp (fused      same (no kernel needed)  exact,
+                by XLA)                                              shard-local
+block_jacobi    batched jnp einsum          Pallas batched           exact,
+                                            block-apply kernel       shard-local
+                                            (shared-block case:
+                                            one MXU matmul)
+neumann         jnp matvec series           series on the Pallas     shard-local
+                                            SpMV / block-ELL         (additive-
+                                            kernels (banded ELL)     Schwarz)
+ssor            stencil shifts (jnp,        same jnp body (no        shard-local
+                XLA-fused)                  dedicated kernel)        (additive-
+                                                                     Schwarz)
+==============  ==========================  =======================  ============
+
+Every apply is shape-polymorphic over ``(n,)`` / ``(n, m)`` operands,
+contains no inner products (the dot_reduce/psum counts above are
+precond-independent), and — composed as ``M^{-1} ∘ A`` — sits inside the
+pipelined solvers' overlap window, so the single reduction keeps no
+dependency edge to the in-flight precond+matvec (asserted in
+tests/test_substrate_parity.py and benchmarks/_overlap_child.py).
 """
 from __future__ import annotations
 

@@ -17,6 +17,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..precond.base import PrecondLike, preconditioned_system
 from ._common import init_guess, safe_div, tree_select
 from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
@@ -30,10 +31,16 @@ def bicgstab_solve(matvec: Callable,
                    config: SolverConfig = SolverConfig(),
                    r0_star: Optional[jax.Array] = None,
                    dot_reduce: DotReduce = identity_reduce,
-                   substrate: SubstrateLike = "jnp") -> SolveResult:
-    """Solve A x = b with BiCGStab."""
+                   substrate: SubstrateLike = "jnp",
+                   precond: PrecondLike = None) -> SolveResult:
+    """Solve A x = b with BiCGStab.
+
+    ``precond`` (name or :class:`repro.precond.Preconditioner`) runs the
+    left-preconditioned system M^{-1} A x = M^{-1} b; relres/tol are then
+    in the preconditioned norm.
+    """
     sub = get_substrate(substrate)
-    matvec = sub.as_matvec(matvec)
+    matvec, b = preconditioned_system(sub, matvec, b, precond)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b

@@ -33,9 +33,35 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..precond.base import PrecondLike, resolve_precond
 from . import compat
 from .linear_operator import Stencil7Operator
 from .types import SolveResult, SolverConfig
+
+
+def _shard_local_precond(precond: PrecondLike, c: jax.Array,
+                         local_shape: Tuple[int, int, int]):
+    """Resolve ``precond`` against the LOCAL slab operator.
+
+    Name specs build from the shard's own ``(nxl, ny, nz)`` stencil
+    operator, so every preconditioner is communication-free by
+    construction: its arrays describe one slab and its apply touches no
+    mesh axis (the per-iteration psum count is therefore unchanged —
+    asserted in tests/_distributed_check.py).  For ``"jacobi"`` and
+    ``"block_jacobi"`` this is *exact* (the diagonal is constant and
+    z-line blocks never straddle x-slab boundaries); for ``"neumann"``
+    and ``"ssor"`` it is the shard-local (zero-Dirichlet at slab
+    boundaries) additive-Schwarz flavor of the global preconditioner —
+    still a fixed linear M^{-1}, just a slightly weaker one.
+
+    A :class:`~repro.precond.Preconditioner` instance is passed through
+    untouched; its arrays must already be local-slab sized (or
+    shard-shape-free, like a shared (1, bs, bs) block).
+    """
+    if not isinstance(precond, str):
+        return precond
+    local_op = Stencil7Operator(c, *local_shape)
+    return resolve_precond(precond, local_op)
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +148,7 @@ def distributed_stencil_solve(solver: Callable,
                               shard_axes: Optional[Sequence[str]] = None,
                               config: SolverConfig = SolverConfig(),
                               substrate: str = "jnp",
+                              precond: PrecondLike = None,
                               jit: bool = True):
     """Solve the stencil system on ``mesh`` with any solver from repro.core.
 
@@ -133,6 +160,11 @@ def distributed_stencil_solve(solver: Callable,
     (:mod:`repro.core.substrate`): the fused dot partials and vector
     updates inside each shard come from that substrate, while the global
     reduction stays this driver's single ``psum`` either way.
+
+    ``precond`` is resolved against the LOCAL slab operator
+    (:func:`_shard_local_precond`), so every preconditioner apply is
+    shard-local — zero extra communication and an unchanged single psum
+    per reduction phase.
     """
     axes = tuple(shard_axes if shard_axes is not None else mesh.axis_names)
     sizes = _axis_sizes(mesh, axes)
@@ -142,6 +174,7 @@ def distributed_stencil_solve(solver: Callable,
         raise ValueError(f"nx={nx} not divisible by {n_shards} shards")
     local_shape = (nx // n_shards, ny, nz)
     c = op.c
+    pc = _shard_local_precond(precond, c, local_shape)
 
     def dot_reduce(partials):
         return lax.psum(partials, axes)   # ONE reduction for all dots
@@ -150,7 +183,7 @@ def distributed_stencil_solve(solver: Callable,
         mv = functools.partial(halo_stencil_matvec, c,
                                local_shape=local_shape, axes=axes, sizes=sizes)
         res = solver(mv, b_local.reshape(-1), config=config,
-                     dot_reduce=dot_reduce, substrate=substrate)
+                     dot_reduce=dot_reduce, substrate=substrate, precond=pc)
         return res._replace(x=res.x.reshape(local_shape))
 
     in_specs = P(axes)
@@ -172,6 +205,7 @@ def distributed_stencil_solve_batched(op: Stencil7Operator,
                                       shard_axes: Optional[Sequence[str]] = None,
                                       config: SolverConfig = SolverConfig(),
                                       substrate: str = "jnp",
+                                      precond: PrecondLike = None,
                                       jit: bool = True):
     """Batched multi-RHS stencil solve sharded over ``mesh``.
 
@@ -207,6 +241,9 @@ def distributed_stencil_solve_batched(op: Stencil7Operator,
     local_shape = (nx // n_shards, ny, nz)
     n_local = local_shape[0] * ny * nz
     c = op.c
+    # shard-local preconditioner (shape-polymorphic apply: the same bound
+    # M^{-1} serves the (n_local, m) block — one build for all m columns)
+    pc = _shard_local_precond(precond, c, local_shape)
 
     def dot_reduce(partials):
         return lax.psum(partials, axes)   # ONE reduction: the (9, m) block
@@ -220,7 +257,7 @@ def distributed_stencil_solve_batched(op: Stencil7Operator,
         # single-RHS driver uses too.
         res = solve_batched(mv, b_local.reshape(n_local, m), config=config,
                             dot_reduce=dot_reduce,
-                            substrate=substrate, blocked=True)
+                            substrate=substrate, blocked=True, precond=pc)
         return res._replace(x=res.x.reshape(*local_shape, m))
 
     in_specs = P(axes)

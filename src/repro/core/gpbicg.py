@@ -12,6 +12,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..precond.base import PrecondLike, preconditioned_system
 from ._common import init_guess, safe_div, tree_select
 from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
@@ -25,10 +26,12 @@ def gpbicg_solve(matvec: Callable,
                  config: SolverConfig = SolverConfig(),
                  r0_star: Optional[jax.Array] = None,
                  dot_reduce: DotReduce = identity_reduce,
-                 substrate: SubstrateLike = "jnp") -> SolveResult:
-    """Solve A x = b with GPBi-CG (Alg. 2.2)."""
+                 substrate: SubstrateLike = "jnp",
+                 precond: PrecondLike = None) -> SolveResult:
+    """Solve A x = b with GPBi-CG (Alg. 2.2; left-preconditioned when
+    ``precond`` is set)."""
     sub = get_substrate(substrate)
-    matvec = sub.as_matvec(matvec)
+    matvec, b = preconditioned_system(sub, matvec, b, precond)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b

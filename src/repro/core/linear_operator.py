@@ -246,37 +246,13 @@ def as_matvec(op) -> MatVec:
     return lambda x: a @ x
 
 
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class JacobiPreconditioner:
-    """Left Jacobi preconditioner M^{-1} = diag(A)^{-1}.
-
-    The paper runs unpreconditioned (to expose raw convergence behaviour);
-    this exists because a production framework needs one, and because the
-    preconditioned operator M^{-1}A is what the solvers see — they stay
-    oblivious.
-    """
-
-    inv_diag: jax.Array
-
-    def apply(self, x: jax.Array) -> jax.Array:
-        return self.inv_diag * x
-
-    @staticmethod
-    def from_operator(op) -> "JacobiPreconditioner":
-        d = op.diagonal()
-        return JacobiPreconditioner(jnp.where(d != 0, 1.0 / d, 1.0))
-
-    def tree_flatten(self):
-        return (self.inv_diag,), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-
-def preconditioned_matvec(op, precond) -> MatVec:
-    mv = as_matvec(op)
-    if precond is None:
-        return mv
-    return lambda x: precond.apply(mv(x))
+# -- deprecation re-exports ---------------------------------------------------
+# The preconditioning machinery moved to the repro.precond subsystem
+# (PR 3): JacobiPreconditioner gained a dtype-preserving zero-diagonal
+# guard + (n, m) multi-RHS applies there, and preconditioned_matvec is
+# superseded by the solvers' precond= parameter (which keeps operator
+# dispatch to the Pallas kernels and routes the M^{-1}-apply through the
+# compute substrate).  These aliases keep the historical import path
+# working; new code should import from repro.precond.
+from repro.precond.base import preconditioned_matvec  # noqa: E402,F401
+from repro.precond.jacobi import JacobiPreconditioner  # noqa: E402,F401

@@ -34,6 +34,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..precond.base import PrecondLike, wrap_block_preconditioned
 from ._common import bicgsafe_coefficients, pipelined_recurrence_tail
 from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, identity_reduce)
@@ -75,7 +76,8 @@ def solve_batched(matvec: Callable,
                   r0_star: Optional[jax.Array] = None,
                   dot_reduce: DotReduce = identity_reduce,
                   substrate: SubstrateLike = "jnp",
-                  blocked: bool = False) -> SolveResult:
+                  blocked: bool = False,
+                  precond: PrecondLike = None) -> SolveResult:
     """Solve A X = B with p-BiCGSafe for all m columns of B at once.
 
     Args:
@@ -91,6 +93,13 @@ def solve_batched(matvec: Callable,
       blocked: the given ``matvec`` already maps (n, m) column blocks to
         (n, m) — used by the distributed driver, whose halo-exchange
         matvec streams whole blocks (one ppermute cascade for all m).
+      precond: optional left preconditioner (name or
+        :class:`repro.precond.Preconditioner`): the solve runs on
+        M^{-1} A with M^{-1} B, every column through the SAME M^{-1}
+        (its apply is column-batched, in-kernel for block-Jacobi on the
+        pallas substrate), still ONE (9, m) reduction per iteration.
+        With ``blocked=True`` pass an instance — name specs need the
+        operator object to build from.
 
     Returns a :class:`SolveResult` with column-batched fields: ``x`` is
     (n, m); ``iterations``, ``relres``, ``converged``, ``breakdown`` are
@@ -107,6 +116,7 @@ def solve_batched(matvec: Callable,
         raise ValueError(f"B must be (n, m); got shape {B.shape}")
     sub = get_substrate(substrate)
     bmv = matvec if blocked else sub.as_block_matvec(matvec)
+    bmv, B = wrap_block_preconditioned(sub, bmv, B, precond, matvec)
     n, m = B.shape
     eps = config.breakdown_threshold(B.dtype)
 

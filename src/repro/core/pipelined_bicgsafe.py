@@ -28,6 +28,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..precond.base import PrecondLike, preconditioned_system
 from ._common import (bicgsafe_coefficients, init_guess,
                       pipelined_recurrence_tail, tree_select)
 from .substrate import SubstrateLike, get_substrate
@@ -36,9 +37,14 @@ from .types import (DotReduce, SolveResult, SolverConfig, history_init,
 
 
 def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
-                     residual_replacement: bool, substrate: SubstrateLike):
+                     residual_replacement: bool, substrate: SubstrateLike,
+                     precond: PrecondLike = None):
+    # Left preconditioning composes M^{-1} INTO the matvec, so every
+    # recurred A-image below is an (M^{-1}A)-image and the algebra is
+    # unchanged; the M^{-1}-apply becomes part of the in-flight compute
+    # the single reduction overlaps (the dots still read none of it).
     sub = get_substrate(substrate)
-    matvec = sub.as_matvec(matvec)
+    matvec, b = preconditioned_system(sub, matvec, b, precond)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b          # MV (init)
@@ -145,10 +151,17 @@ def pbicgsafe_solve(matvec: Callable,
                     config: SolverConfig = SolverConfig(),
                     r0_star: Optional[jax.Array] = None,
                     dot_reduce: DotReduce = identity_reduce,
-                    substrate: SubstrateLike = "jnp") -> SolveResult:
-    """Solve A x = b with p-BiCGSafe (paper Alg. 3.1)."""
+                    substrate: SubstrateLike = "jnp",
+                    precond: PrecondLike = None) -> SolveResult:
+    """Solve A x = b with p-BiCGSafe (paper Alg. 3.1).
+
+    ``precond`` runs the left-preconditioned system M^{-1} A x = M^{-1} b
+    with the M^{-1}-apply scheduled inside the overlap window of the one
+    reduction per iteration (relres/tol are in the preconditioned norm).
+    """
     return _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
-                            residual_replacement=False, substrate=substrate)
+                            residual_replacement=False, substrate=substrate,
+                            precond=precond)
 
 
 def pbicgsafe_rr_solve(matvec: Callable,
@@ -158,11 +171,16 @@ def pbicgsafe_rr_solve(matvec: Callable,
                        config: SolverConfig = SolverConfig(),
                        r0_star: Optional[jax.Array] = None,
                        dot_reduce: DotReduce = identity_reduce,
-                       substrate: SubstrateLike = "jnp") -> SolveResult:
+                       substrate: SubstrateLike = "jnp",
+                       precond: PrecondLike = None) -> SolveResult:
     """Solve A x = b with p-BiCGSafe-rr (paper Alg. 4.1).
 
     ``config.rr_epoch`` is the paper's ``m`` (default 100, the paper's
-    default), ``config.rr_maxiter`` the cutoff ``M``.
+    default), ``config.rr_maxiter`` the cutoff ``M``.  ``precond`` as in
+    :func:`pbicgsafe_solve`; the replacement branch recomputes the true
+    residual of the *preconditioned* system, so the recurred and replaced
+    quantities stay consistent.
     """
     return _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
-                            residual_replacement=True, substrate=substrate)
+                            residual_replacement=True, substrate=substrate,
+                            precond=precond)

@@ -16,6 +16,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..precond.base import PrecondLike, preconditioned_system
 from ._common import init_guess, safe_div, tree_select
 from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, history_init,
@@ -29,10 +30,17 @@ def pbicgstab_solve(matvec: Callable,
                     config: SolverConfig = SolverConfig(),
                     r0_star: Optional[jax.Array] = None,
                     dot_reduce: DotReduce = identity_reduce,
-                    substrate: SubstrateLike = "jnp") -> SolveResult:
-    """Solve A x = b with pipelined BiCGStab (Cools-Vanroose Alg. 5)."""
+                    substrate: SubstrateLike = "jnp",
+                    precond: PrecondLike = None) -> SolveResult:
+    """Solve A x = b with pipelined BiCGStab (Cools-Vanroose Alg. 5).
+
+    This is the method the reference presents *preconditioned*: with
+    ``precond`` set, the M^{-1}-applies ride inside each matvec and both
+    reduction phases keep their overlap with the in-flight
+    preconditioned matvec (the dots never read its output).
+    """
     sub = get_substrate(substrate)
-    matvec = sub.as_matvec(matvec)
+    matvec, b = preconditioned_system(sub, matvec, b, precond)
     eps = config.breakdown_threshold(b.dtype)
     x = init_guess(b, x0)
     r0 = b - matvec(x) if x0 is not None else b

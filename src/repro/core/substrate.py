@@ -67,6 +67,9 @@ class Substrate:
     """
 
     name = "abstract"
+    #: True when the substrate executes the hand-tiled Pallas kernels —
+    #: preconditioners consult this in ``bind`` to pick their kernel path.
+    kernel_backed = False
 
     def dots(self, pairs: Sequence[Tuple[jax.Array, jax.Array]]) -> jax.Array:
         """Stacked local partials <a,b> per pair: (k,) or (k, m) batched."""
@@ -108,6 +111,20 @@ class Substrate:
         from .multirhs import batched_matvec   # lazy: multirhs imports us
         return batched_matvec(self.as_matvec(op))
 
+    def as_precond_apply(self, pc):
+        """Preconditioner -> substrate-routed M^{-1}-apply callable.
+
+        Delegates to ``pc.bind(self)`` so kernel dispatch lives with each
+        preconditioner class (:mod:`repro.precond`): block-Jacobi binds
+        the Pallas batched block-apply kernel on kernel-backed substrates,
+        Neumann builds its series on this substrate's (block) matvec, and
+        elementwise/shift applies stay jnp (XLA fuses them).  The bound
+        apply is shape-polymorphic over ``(n,)`` / ``(n, m)`` operands
+        and contains NO inner products — preconditioning never changes
+        the solver's ``dot_reduce`` count.
+        """
+        return pc.bind(self)
+
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -140,6 +157,7 @@ class PallasSubstrate(Substrate):
     """
 
     name = "pallas"
+    kernel_backed = True
 
     def dots(self, pairs):
         return local_dots(pairs)

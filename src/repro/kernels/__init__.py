@@ -14,6 +14,9 @@ Kernels (each solver kernel has a multi-RHS block variant that streams
   fused_axpy       p-BiCGSafe's 10 vector updates in one HBM pass
                    (batched: per-column coefficients + the convergence
                    mask applied in-kernel)
+  precond_apply    block-Jacobi M^{-1}: batched pre-inverted (bs, bs)
+                   block matmuls (backs repro.precond's block_jacobi;
+                   batched: block tiles read once for all m columns)
   flash_attention  causal GQA flash attention (model-stack hot spot)
 """
 from . import ops, ref

@@ -17,6 +17,11 @@ per-column convergence mask in-kernel) and amortize the matrix/index
 loads of the SpMV over all m columns.  In every case the dot partials are
 reduced by the solver's single ``psum``, which is what keeps the
 synchronization count at one regardless of m.
+
+``block_jacobi_apply`` backs the block-Jacobi preconditioner of
+:mod:`repro.precond` the same way: (n,) and (n, m) applies through the
+batched block kernel, with the shared-block (nb == 1) case
+short-circuited to one dense matmul.
 """
 from __future__ import annotations
 
@@ -31,6 +36,8 @@ from . import ref
 from .flash_attention import flash_attention_pallas
 from .fused_axpy import fused_axpy_batched_pallas, fused_axpy_pallas
 from .fused_dots import fused_dots_batched_pallas, fused_dots_pallas
+from .precond_apply import (block_jacobi_apply_batched_pallas,
+                            block_jacobi_apply_pallas)
 from .spmv_ell import spmv_ell_batched_pallas, spmv_ell_pallas
 
 
@@ -76,6 +83,26 @@ def ell_is_banded(op, block_rows: int = 512) -> bool:
     vals = np.asarray(op.values)
     band = np.abs(np.where(vals != 0, cols - rows, 0)).max()
     return bool(band < block_rows)
+
+
+def block_jacobi_apply(inv_blocks, x) -> jax.Array:
+    """Block-Jacobi M^{-1} apply via the Pallas batched block kernel.
+
+    ``inv_blocks``: (nb, bs, bs) pre-inverted diagonal blocks; ``x`` an
+    ``(n,)`` vector or ``(n, m)`` multi-RHS block.  The shared-block case
+    (nb == 1, every row block identical — constant-coefficient stencils)
+    is a single dense matmul that XLA already maps onto the MXU, so it
+    short-circuits to the reference path rather than the kernel.
+    """
+    nb, bs, _ = inv_blocks.shape
+    assert x.shape[0] % bs == 0, (x.shape, bs)
+    if nb == 1:
+        return ref.block_jacobi_apply(inv_blocks, x)
+    assert x.shape[0] == nb * bs, (x.shape, inv_blocks.shape)
+    if x.ndim == 2:
+        return block_jacobi_apply_batched_pallas(inv_blocks, x,
+                                                 interpret=_interpret())
+    return block_jacobi_apply_pallas(inv_blocks, x, interpret=_interpret())
 
 
 def fused_axpy(vecs: Dict[str, jax.Array], scalars,

@@ -74,6 +74,31 @@ def fused_axpy(vecs, scalars, mask=None):
     return out
 
 
+def block_jacobi_apply(inv_blocks, x) -> jax.Array:
+    """Block-Jacobi apply: y_g = inv_blocks[g] @ x_g per row block.
+
+    ``inv_blocks`` is (nb, bs, bs), or (1, bs, bs) for one block shared
+    by every row block (constant-coefficient stencils).  ``x`` may be an
+    (n,) vector or an (n, m) multi-RHS block; n == (n // bs) * bs.
+    """
+    nb, bs, _ = inv_blocks.shape
+    n = x.shape[0]
+    g = n // bs
+    if x.ndim == 2:
+        xb = x.reshape(g, bs, x.shape[1])
+        if nb == 1:
+            y = jnp.einsum("ij,gjm->gim", inv_blocks[0], xb)
+        else:
+            y = jnp.einsum("gij,gjm->gim", inv_blocks, xb)
+        return y.reshape(x.shape)
+    xb = x.reshape(g, bs)
+    if nb == 1:
+        y = xb @ inv_blocks[0].T
+    else:
+        y = jnp.einsum("gij,gj->gi", inv_blocks, xb)
+    return y.reshape(n)
+
+
 def flash_attention(q, k, v, scale: float, causal: bool = True) -> jax.Array:
     """q: (B,H,S,hd)  k/v: (B,K,S,hd), GQA with G=H//K."""
     B, H, S, hd = q.shape

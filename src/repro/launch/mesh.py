@@ -42,6 +42,10 @@ def make_multirhs_mesh(n_devices: int | None = None):
     over all devices.  The (n, m) block is row-sharded over it while the m
     columns stay local to every shard, so the batched solver's single
     (9, m) psum reduces over exactly this axis
-    (:func:`repro.core.distributed.distributed_stencil_solve_batched`)."""
+    (:func:`repro.core.distributed.distributed_stencil_solve_batched`).
+    Shard-local preconditioning (``precond=`` on the distributed drivers,
+    e.g. block-Jacobi) adds no traffic on any axis of this mesh — the
+    psum stays the only per-iteration collective besides the halo
+    ppermutes."""
     n = n_devices or jax.device_count()
     return make_mesh((n,), ("rows",))

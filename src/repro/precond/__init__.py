@@ -1,0 +1,41 @@
+"""repro.precond — the preconditioning subsystem.
+
+Fixed linear M^{-1} operators threaded through every solver entry point
+in :mod:`repro.core` via ``precond=`` (left preconditioning: the solvers
+run on M^{-1} A with M^{-1} b, so ``relres``/``tol`` measure the
+preconditioned residual).  See :mod:`repro.precond.base` for why this is
+threaded through the solvers rather than composed as a matvec wrapper
+(substrate dispatch, communication hiding, sync-count preservation).
+
+Preconditioners (all pytrees; ``(n,)`` and ``(n, m)`` multi-RHS applies):
+
+* :func:`jacobi`        — diag(A)^{-1}; elementwise, fused by XLA.
+* :func:`block_jacobi`  — pre-inverted dense diagonal blocks, applied by
+  the Pallas batched block-apply kernel on the pallas substrate
+  (:mod:`repro.kernels.precond_apply`); exactly shard-local in the
+  distributed driver.
+* :func:`neumann`       — degree-d truncated Neumann polynomial; pure
+  matvec arithmetic, rides the substrate's SpMV kernels.
+* :func:`ssor`          — truncated-Neumann SSOR for Stencil7 operators.
+
+``precond=`` also accepts these names as strings ("jacobi",
+"block_jacobi", "neumann", "ssor") when the solver is handed an operator
+object to build from.
+"""
+from .base import (PRECONDITIONERS, Preconditioner, PrecondLike,
+                   preconditioned_matvec, preconditioned_system,
+                   resolve_precond, wrap_block_preconditioned)
+from .block_jacobi import BlockJacobiPreconditioner, block_jacobi
+from .jacobi import JacobiPreconditioner, jacobi
+from .polynomial import NeumannPreconditioner, neumann
+from .ssor import SSORPreconditioner, ssor
+
+__all__ = [
+    "Preconditioner", "PrecondLike", "PRECONDITIONERS",
+    "resolve_precond", "preconditioned_system",
+    "wrap_block_preconditioned", "preconditioned_matvec",
+    "JacobiPreconditioner", "jacobi",
+    "BlockJacobiPreconditioner", "block_jacobi",
+    "NeumannPreconditioner", "neumann",
+    "SSORPreconditioner", "ssor",
+]

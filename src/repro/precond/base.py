@@ -1,0 +1,165 @@
+"""Preconditioner API: fixed linear M^{-1} operators for the Krylov core.
+
+Left preconditioning throughout: a solver handed ``precond=`` solves
+
+    M^{-1} A x = M^{-1} b
+
+so the preconditioned residual norm is what ``relres``/``tol`` measure
+(the standard convention; the returned ``x`` solves the original system).
+Every preconditioner here is a *fixed linear* operator — mandatory for the
+Krylov recurrences, and doubly so for the pipelined solvers whose recurred
+A-images (q, w, l, g, s) silently assume the operator does not change
+between iterations.
+
+Why this is not a matvec wrapper
+--------------------------------
+The solvers accept the operator and the preconditioner *separately* and
+compose them internally, for three reasons:
+
+* substrate dispatch — a pre-composed closure would hide the operator
+  type, so banded :class:`~repro.core.linear_operator.ELLOperator`s could
+  no longer route to the Pallas SpMV kernels.  Threading ``precond=``
+  keeps ``sub.as_matvec(op)`` / ``sub.as_block_matvec(op)`` dispatch
+  intact and routes the M^{-1}-apply itself through the substrate
+  (:meth:`repro.core.substrate.Substrate.as_precond_apply`).
+* communication hiding — composed as ``M^{-1} ∘ A``, the apply lives
+  *inside* the overlap window of the pipelined solvers: the fused dot
+  phase still reads only ``{s, y, r, t_prev, rs}``, so the single
+  reduction keeps NO dependency edge to the in-flight precond+matvec
+  (exactly the role the M^{-1}-applies play in Cools & Vanroose's
+  preconditioned pipelined BiCGStab, arXiv:1612.01395; asserted
+  structurally in tests/test_substrate_parity.py and
+  benchmarks/_overlap_child.py).
+* synchronization count — no preconditioner here performs an inner
+  product, so the per-iteration ``dot_reduce``/``psum`` count is
+  unchanged by preconditioning (asserted in the sync-count tests and
+  tests/_distributed_check.py).
+
+``precond=`` accepts a :class:`Preconditioner` instance or a name from
+:data:`PRECONDITIONERS` (``"jacobi"``, ``"block_jacobi"``, ``"neumann"``,
+``"ssor"``) — names are built from the operator via its ``diagonal()`` /
+structure, so they require an operator object, not a bare matvec callable.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple, Union
+
+import jax
+
+
+class Preconditioner:
+    """Abstract fixed linear M^{-1}; subclasses are registered pytrees.
+
+    ``apply(x)`` is the pure-jnp reference implementation and must be
+    shape-polymorphic: ``(n,)`` vectors and ``(n, m)`` multi-RHS column
+    blocks both map through the same preconditioner (per-column).
+
+    ``bind(sub)`` returns the substrate-routed apply callable.  The base
+    implementation returns :meth:`apply`; subclasses with a dedicated
+    kernel (block-Jacobi) or matvec-based applies (Neumann) override it
+    to consume the substrate's kernels (``sub.kernel_backed`` says whether
+    the substrate is the Pallas one).
+    """
+
+    name = "abstract"
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def bind(self, sub) -> Callable[[jax.Array], jax.Array]:
+        return self.apply
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+def _factories():
+    # lazy: the factory modules import operator classes from repro.core
+    from .block_jacobi import block_jacobi
+    from .jacobi import jacobi
+    from .polynomial import neumann
+    from .ssor import ssor
+    return {"jacobi": jacobi, "block_jacobi": block_jacobi,
+            "neumann": neumann, "ssor": ssor}
+
+
+#: registry names accepted by ``precond=`` (resolved via the factories
+#: in :func:`_factories`, each ``f(op) -> Preconditioner``)
+PRECONDITIONERS = ("jacobi", "block_jacobi", "neumann", "ssor")
+
+PrecondLike = Union[None, str, Preconditioner]
+
+
+def resolve_precond(spec: PrecondLike, op) -> Optional[Preconditioner]:
+    """Resolve a precond spec: None / instance / registry name.
+
+    Name specs are built from ``op``, which must be an operator object
+    (``diagonal()`` etc.) — a bare matvec callable cannot seed a
+    preconditioner and raises a TypeError naming the fix.
+    """
+    if spec is None or isinstance(spec, Preconditioner):
+        return spec
+    if isinstance(spec, str):
+        factories = _factories()
+        if spec not in factories:
+            raise ValueError(
+                f"unknown preconditioner {spec!r}; expected one of "
+                f"{sorted(factories)} or a Preconditioner instance")
+        if not hasattr(op, "diagonal"):
+            raise TypeError(
+                f"precond={spec!r} must be built from an operator object "
+                "with .diagonal(); got a bare matvec callable — pass the "
+                "operator itself, or construct the preconditioner "
+                "explicitly (repro.precond.jacobi(op) etc.)")
+        return factories[spec](op)
+    raise TypeError(f"precond must be None, a name, or a Preconditioner; "
+                    f"got {type(spec).__name__}")
+
+
+def preconditioned_system(sub, op, b: jax.Array, precond: PrecondLike
+                          ) -> Tuple[Callable, jax.Array]:
+    """(matvec', b') of the left-preconditioned single-RHS system.
+
+    ``matvec' = M^{-1} ∘ A`` with A from ``sub.as_matvec(op)`` (so operator
+    dispatch to the Pallas SpMV survives) and the M^{-1}-apply from
+    ``sub.as_precond_apply`` — inside the pipelined solvers the whole
+    composite is the in-flight compute the single reduction overlaps.
+    """
+    mv = sub.as_matvec(op)
+    pc = resolve_precond(precond, op)
+    if pc is None:
+        return mv, b
+    papply = sub.as_precond_apply(pc)
+    return (lambda x: papply(mv(x))), papply(b)
+
+
+def wrap_block_preconditioned(sub, bmv: Callable, B: jax.Array,
+                              precond: PrecondLike, op
+                              ) -> Tuple[Callable, jax.Array]:
+    """Block (multi-RHS) analogue of :func:`preconditioned_system`.
+
+    ``bmv`` is the already-lifted ``(n, m) -> (n, m)`` block matvec (the
+    substrate's, or the distributed driver's halo matvec); the
+    preconditioner apply is shape-polymorphic so the same bound callable
+    serves the column block.
+    """
+    pc = resolve_precond(precond, op)
+    if pc is None:
+        return bmv, B
+    papply = sub.as_precond_apply(pc)
+    return (lambda x: papply(bmv(x))), papply(B)
+
+
+def preconditioned_matvec(op, precond) -> Callable:
+    """Compose ``M^{-1} ∘ A`` as a bare callable.
+
+    Deprecated entry point (kept for the historical
+    ``repro.core.linear_operator`` API): prefer passing ``precond=`` to a
+    solver, which keeps operator dispatch and routes the apply through
+    the compute substrate.
+    """
+    from repro.core.linear_operator import as_matvec
+    mv = as_matvec(op)
+    if precond is None:
+        return mv
+    return lambda x: precond.apply(mv(x))

@@ -3,6 +3,7 @@
 Invoked by tests/test_distributed.py.  Exits nonzero on any failure.
 """
 import os
+import sys
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
@@ -65,6 +66,7 @@ def check_batched(mesh_shape, axis_names, op, b, substrate):
           f"substrate={substrate} iters={np.asarray(res.iterations)}")
 
 
+from _jaxpr_utils import eqn_needs_ppermute as _eqn_needs_ppermute  # noqa: E402
 from _jaxpr_utils import find_while_body as _find_while_body  # noqa: E402
 
 
@@ -89,22 +91,77 @@ def check_batched_structure(op, b):
     assert psum_eqn.invars[0].aval.shape == (9, m), \
         psum_eqn.invars[0].aval.shape
 
-    needed = {v for v in psum_eqn.invars
-              if not isinstance(v, jax.core.Literal)}
-    permute_outs = set()
-    for eqn in reversed(body.eqns):
-        if eqn is psum_eqn:
-            continue
-        if eqn.primitive.name == "ppermute":
-            permute_outs.update(eqn.outvars)
-        if any(ov in needed for ov in eqn.outvars):
-            needed |= {v for v in eqn.invars
-                       if not isinstance(v, jax.core.Literal)}
+    permute_outs, needs = _eqn_needs_ppermute(body, psum_eqn)
     assert permute_outs, "no halo ppermutes in the loop body"
-    assert not (permute_outs & needed), \
+    assert not needs, \
         "the (9, m) reduction transitively consumes the halo exchange"
     print(f"  ok batched structure: 1 psum/iter of (9, {m}), "
           f"{len(permute_outs)} halo ppermute outputs, no edge to psum")
+
+
+def check_precond_structure(op, b):
+    """Preconditioning must not change the communication structure: the
+    8-way sharded p-BiCGSafe while body with shard-local block-Jacobi
+    still holds EXACTLY ONE psum (the (9,) stacked partials) and the
+    psum's transitive inputs contain NO ppermute — the M^{-1}-apply rides
+    inside the overlap window without adding or serializing collectives."""
+    mesh = jax.make_mesh((8,), ("rows",))
+    bodies = {}
+    for pc in (None, "block_jacobi"):
+        jaxpr = jax.make_jaxpr(lambda bb: distributed_stencil_solve(
+            pbicgsafe_solve, op, bb, mesh, config=SolverConfig(maxiter=10),
+            precond=pc, jit=False))(b.reshape(op.nx, op.ny, op.nz))
+        body = _find_while_body(jaxpr.jaxpr)
+        assert body is not None, f"no while loop (precond={pc})"
+        bodies[pc] = body
+
+    counts = {}
+    for pc, body in bodies.items():
+        psums = [e for e in body.eqns if e.primitive.name == "psum"]
+        counts[pc] = len(psums)
+        assert len(psums) == 1, \
+            f"precond={pc}: want ONE psum/iter, got {len(psums)}"
+        psum_eqn = psums[0]
+        assert psum_eqn.invars[0].aval.shape == (9,), \
+            psum_eqn.invars[0].aval.shape
+        permute_outs, needs = _eqn_needs_ppermute(body, psum_eqn)
+        assert permute_outs, f"precond={pc}: no halo ppermutes in body"
+        assert not needs, \
+            f"precond={pc}: the reduction consumes the halo exchange"
+    assert counts[None] == counts["block_jacobi"], counts
+    print("  ok precond structure: single-psum-per-iteration count "
+          f"unchanged by block-Jacobi ({counts[None]} == "
+          f"{counts['block_jacobi']}), no edge to the halo exchange")
+
+
+def check_precond_numeric(mesh_shape, axis_names, op, b_grid, xt):
+    """Shard-local block-Jacobi converges in <= the unpreconditioned
+    iterations and still solves the ORIGINAL system."""
+    mesh = jax.make_mesh(mesh_shape, axis_names)
+    cfg = SolverConfig(tol=1e-8)
+    plain = distributed_stencil_solve(pbicgsafe_solve, op, b_grid, mesh,
+                                      config=cfg)
+    prec = distributed_stencil_solve(pbicgsafe_solve, op, b_grid, mesh,
+                                     config=cfg, precond="block_jacobi")
+    assert bool(prec.converged), f"{axis_names}: preconditioned not converged"
+    err = float(jnp.linalg.norm(prec.x.reshape(-1) - xt)
+                / jnp.linalg.norm(xt))
+    assert err < 1e-6, f"{axis_names}: err {err}"
+    assert int(prec.iterations) <= int(plain.iterations), \
+        (int(prec.iterations), int(plain.iterations))
+    print(f"  ok precond mesh={mesh_shape} axes={axis_names} "
+          f"block-Jacobi iters={int(prec.iterations)} <= "
+          f"plain {int(plain.iterations)}, err={err:.1e}")
+
+
+def precond_smoke():
+    """CI smoke entry (``python tests/_distributed_check.py precond``):
+    block-Jacobi-enabled distributed solve with the psum-count assertion."""
+    assert jax.device_count() == 8, jax.device_count()
+    op, b, xt = M.convection_diffusion(16, peclet=1.0)
+    check_precond_structure(op, b)
+    check_precond_numeric((8,), ("rows",), op, b.reshape(16, 16, 16), xt)
+    print("PRECOND DISTRIBUTED SMOKE PASSED")
 
 
 def main():
@@ -129,8 +186,16 @@ def main():
     check_batched((8,), ("rows",), op, b, "jnp")
     check_batched((4, 2), ("data", "model"), op, b, "jnp")
     check_batched((8,), ("rows",), op, b, "pallas")
+
+    # shard-local preconditioning: psum count unchanged, numerics hold
+    check_precond_structure(op, b)
+    check_precond_numeric((8,), ("rows",), op, b_grid, xt)
+    check_precond_numeric((4, 2), ("data", "model"), op, b_grid, xt)
     print("ALL DISTRIBUTED CHECKS PASSED")
 
 
 if __name__ == "__main__":
-    main()
+    if "precond" in sys.argv[1:]:
+        precond_smoke()
+    else:
+        main()

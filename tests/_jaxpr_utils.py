@@ -33,6 +33,31 @@ def count_prim(jaxpr, name):
     return cnt
 
 
+def eqn_needs_ppermute(body, target_eqn):
+    """Overlap probe: does ``target_eqn`` (e.g. the psum of the fused dot
+    partials) transitively consume any ppermute output of ``body``?
+
+    Walks the loop body's equations in reverse, growing the set of
+    variables the target needs (Literals excluded), and intersects it
+    with every ppermute's outputs.  Returns ``(permute_outs, needs)`` —
+    the set of halo-exchange outputs found, and whether the target
+    depends on any of them (False == no dependency edge == the reduction
+    may overlap the in-flight matvec).
+    """
+    needed = {v for v in target_eqn.invars
+              if not isinstance(v, jax.core.Literal)}
+    permute_outs = set()
+    for eqn in reversed(body.eqns):
+        if eqn is target_eqn:
+            continue
+        if eqn.primitive.name == "ppermute":
+            permute_outs.update(eqn.outvars)
+        if any(ov in needed for ov in eqn.outvars):
+            needed |= {v for v in eqn.invars
+                       if not isinstance(v, jax.core.Literal)}
+    return permute_outs, bool(permute_outs & needed)
+
+
 def find_prim_eqn(jaxpr, name):
     """First equation of the given primitive, searching nested jaxprs."""
     for eqn in jaxpr.eqns:

@@ -1,0 +1,335 @@
+"""Tests for the repro.precond subsystem: kernel parity (single and
+(n, m) batched), API/resolution, the dtype-preserving Jacobi guard,
+preconditioned-solve behaviour on the hard problem classes, and the
+operator ``diagonal()`` consistency sweep every preconditioner bootstraps
+from."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import enable_x64
+from repro.core import (SOLVERS, SolverConfig, get_substrate, pbicgsafe_solve,
+                        solve_batched)
+from repro.core import matrices as M
+from repro.core.linear_operator import (CSROperator, DenseOperator,
+                                        ELLOperator, Stencil7Operator)
+from repro.kernels import ref
+from repro.kernels.precond_apply import (block_jacobi_apply_batched_pallas,
+                                         block_jacobi_apply_pallas)
+from repro.precond import (BlockJacobiPreconditioner, JacobiPreconditioner,
+                           NeumannPreconditioner, SSORPreconditioner,
+                           block_jacobi, jacobi, neumann, resolve_precond,
+                           ssor)
+
+
+# ---------------------------------------------------------------------------
+# Pallas block-apply kernel vs. the jnp oracle (interpret mode on CPU runs
+# the same kernel bodies as TPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nb,bs", [(12, 16), (7, 8), (300, 4), (3, 128),
+                                   (1000, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_block_jacobi_kernel_parity(nb, bs, dtype):
+    """Single-RHS kernel == oracle, incl. group padding (nb=7, 300)."""
+    with enable_x64(dtype == jnp.float64):
+        rng = np.random.default_rng(0)
+        inv = jnp.asarray(rng.standard_normal((nb, bs, bs)), dtype)
+        x = jnp.asarray(rng.standard_normal((nb * bs,)), dtype)
+        got = block_jacobi_apply_pallas(inv, x, interpret=True)
+        want = ref.block_jacobi_apply(inv, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("nb,bs,m", [(12, 16, 3), (7, 8, 1), (64, 4, 17),
+                                     (3, 128, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_block_jacobi_kernel_parity_batched(nb, bs, m, dtype):
+    """(n, m) block kernel == oracle; column j == the 1-D kernel on j."""
+    with enable_x64(dtype == jnp.float64):
+        rng = np.random.default_rng(1)
+        inv = jnp.asarray(rng.standard_normal((nb, bs, bs)), dtype)
+        X = jnp.asarray(rng.standard_normal((nb * bs, m)), dtype)
+        got = block_jacobi_apply_batched_pallas(inv, X, interpret=True)
+        want = ref.block_jacobi_apply(inv, X)
+        assert got.shape == (nb * bs, m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=1e-5)
+        col0 = block_jacobi_apply_pallas(inv, X[:, 0], interpret=True)
+        np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(col0),
+                                   rtol=5e-5, atol=1e-5)
+
+
+def test_ops_dispatch_and_shared_block(x64):
+    """ops.block_jacobi_apply: ndim dispatch + the shared-block (nb == 1)
+    fast path match the oracle."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(2)
+    for nb in (1, 9):
+        inv = jnp.asarray(rng.standard_normal((nb, 8, 8)))
+        x = jnp.asarray(rng.standard_normal((72,)))
+        X = jnp.asarray(rng.standard_normal((72, 4)))
+        np.testing.assert_allclose(
+            np.asarray(ops.block_jacobi_apply(inv, x)),
+            np.asarray(ref.block_jacobi_apply(inv, x)), rtol=1e-10)
+        np.testing.assert_allclose(
+            np.asarray(ops.block_jacobi_apply(inv, X)),
+            np.asarray(ref.block_jacobi_apply(inv, X)), rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# substrate-bound applies: jnp == pallas for every preconditioner, (n,)
+# and (n, m)
+# ---------------------------------------------------------------------------
+
+def _ell_banded(n, seed=0):
+    rng = np.random.default_rng(seed)
+    offs = np.array([-2, -1, 0, 1, 2])
+    cols = np.clip(np.arange(n)[:, None] + offs[None, :], 0, n - 1)
+    vals = rng.standard_normal((n, 5))
+    vals[:, 2] = 1.0 + 1.2 * np.abs(vals).sum(axis=1)
+    return ELLOperator(jnp.asarray(vals), jnp.asarray(cols, np.int32), n)
+
+
+@pytest.mark.parametrize("factory", ["jacobi", "block_jacobi", "neumann",
+                                     "ssor"])
+def test_bound_apply_substrate_parity(x64, factory):
+    """pc.bind(jnp) == pc.bind(pallas) on (n,) vectors and (n, m) blocks
+    — every preconditioner apply runs through the substrate layer on both
+    paths (block-Jacobi through the Pallas kernel, Neumann through the
+    Pallas SpMV for banded ELL operators)."""
+    if factory == "ssor":
+        op, b, _ = M.anisotropic3d(8, eps=1e-2)
+    else:
+        op = _ell_banded(512)
+        b = op.matvec(jnp.ones((512,), jnp.float64))
+    pc = resolve_precond(factory, op)
+    a_jnp = get_substrate("jnp").as_precond_apply(pc)
+    a_pal = get_substrate("pallas").as_precond_apply(pc)
+    X = jnp.stack([b, 0.5 * b, b - 1.0], axis=1)
+    np.testing.assert_allclose(np.asarray(a_pal(b)), np.asarray(a_jnp(b)),
+                               rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(a_pal(X)), np.asarray(a_jnp(X)),
+                               rtol=1e-9, atol=1e-11)
+    # (n, m) apply == column-by-column (n,) apply
+    np.testing.assert_allclose(np.asarray(a_jnp(X)[:, 0]),
+                               np.asarray(a_jnp(b)), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# resolution / API
+# ---------------------------------------------------------------------------
+
+def test_resolve_precond(x64):
+    op, _, _ = M.poisson3d(6)
+    assert resolve_precond(None, op) is None
+    pc = jacobi(op)
+    assert resolve_precond(pc, op) is pc
+    assert isinstance(resolve_precond("jacobi", op), JacobiPreconditioner)
+    assert isinstance(resolve_precond("block_jacobi", op),
+                      BlockJacobiPreconditioner)
+    assert isinstance(resolve_precond("neumann", op), NeumannPreconditioner)
+    assert isinstance(resolve_precond("ssor", op), SSORPreconditioner)
+    with pytest.raises(ValueError, match="unknown preconditioner"):
+        resolve_precond("ilu", op)
+    with pytest.raises(TypeError, match="operator object"):
+        resolve_precond("jacobi", op.matvec)
+    with pytest.raises(TypeError, match="Stencil7Operator"):
+        ssor(M.nonsym_dense(16)[0])
+
+
+def test_preconds_are_pytrees(x64):
+    """Preconditioners are pytrees: they survive jit closures/arguments."""
+    op, b, _ = M.poisson3d(6)
+    for pc in (jacobi(op), block_jacobi(op), neumann(op), ssor(op)):
+        leaves, treedef = jax.tree_util.tree_flatten(pc)
+        pc2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_allclose(np.asarray(pc2.apply(b)),
+                                   np.asarray(pc.apply(b)), rtol=1e-12)
+        out = jax.jit(lambda p, v: p.apply(v))(pc, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(pc.apply(b)),
+                                   rtol=1e-12)
+
+
+def test_deprecation_reexports():
+    """The historical repro.core.linear_operator import path still works
+    and resolves to the repro.precond implementations."""
+    from repro.core.linear_operator import (JacobiPreconditioner as J,
+                                            preconditioned_matvec)
+    import repro.precond as P
+    assert J is P.JacobiPreconditioner
+    assert preconditioned_matvec is P.preconditioned_matvec
+    from repro.core import JacobiPreconditioner as J2
+    assert J2 is P.JacobiPreconditioner
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_jacobi_from_operator_dtype_preserving(x64, dtype):
+    """Regression (PR 3): the zero-diagonal guard must preserve the
+    operator dtype under the x64 conftest — no weak-typed ``1.0 / d``
+    promotion — and substitute exactly 1 on zero-diagonal rows."""
+    a = jnp.asarray(np.diag([2.0, 0.0, -4.0, 8.0]), dtype)
+    pc = JacobiPreconditioner.from_operator(DenseOperator(a))
+    assert pc.inv_diag.dtype == dtype
+    assert not pc.inv_diag.weak_type
+    np.testing.assert_allclose(np.asarray(pc.inv_diag),
+                               [0.5, 1.0, -0.25, 0.125])
+
+
+def test_block_jacobi_singular_block_guard(x64):
+    """A singular diagonal block (e.g. an empty row) degrades to the
+    identity — the block analogue of the Jacobi zero-diagonal guard —
+    instead of raising LinAlgError at setup."""
+    a = np.diag(np.arange(1.0, 13.0))
+    a[2, :] = 0.0                       # empty row -> block 0 singular
+    pc = block_jacobi(DenseOperator(jnp.asarray(a)), block_size=4)
+    inv = np.asarray(pc.inv_blocks)
+    assert np.isfinite(inv).all()
+    np.testing.assert_allclose(inv[0], np.eye(4))       # guarded block
+    np.testing.assert_allclose(inv[1], np.linalg.inv(a[4:8, 4:8]))
+    np.testing.assert_allclose(inv[2], np.linalg.inv(a[8:12, 8:12]))
+
+
+def test_preconditioned_matvec_composes(x64):
+    op, b, _ = M.poisson3d(6)
+    from repro.precond import preconditioned_matvec
+    mv = preconditioned_matvec(op, jacobi(op))
+    np.testing.assert_allclose(np.asarray(mv(b)),
+                               np.asarray(op.matvec(b) / 6.0), rtol=1e-12)
+    assert preconditioned_matvec(op, None)(b).shape == b.shape
+
+
+# ---------------------------------------------------------------------------
+# solver-level behaviour: the acceptance scenario + parity
+# ---------------------------------------------------------------------------
+
+def test_pbicgsafe_block_jacobi_pallas_hard_nonsym(x64):
+    """The acceptance scenario: plain p-BiCGSafe stagnates on the badly
+    row-scaled hard_nonsym family; with precond=block_jacobi(op) on
+    substrate="pallas" it converges in (far) fewer iterations AND still
+    solves the ORIGINAL system."""
+    op, b, xt = M.hard_nonsym(n=600)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    plain = pbicgsafe_solve(op, b, config=cfg)
+    prec = pbicgsafe_solve(op, b, config=cfg, precond=block_jacobi(op),
+                           substrate="pallas")
+    assert bool(prec.converged)
+    assert int(prec.iterations) < int(plain.iterations)
+    err = float(jnp.linalg.norm(prec.x - xt) / jnp.linalg.norm(xt))
+    assert err < 1e-5
+    # true residual of the ORIGINAL (unpreconditioned) system
+    true = float(jnp.linalg.norm(b - op.matvec(prec.x))
+                 / jnp.linalg.norm(b))
+    assert true < 1e-4
+
+
+@pytest.mark.parametrize("precond", ["jacobi", "block_jacobi", "neumann",
+                                     "ssor"])
+def test_preconditioned_solve_substrate_parity(x64, precond):
+    """Preconditioned p-BiCGSafe: jnp and pallas substrates run the same
+    algorithm (iteration counts within the usual ±1 stopping jitter,
+    solution-level agreement)."""
+    op, b, xt = M.convection_diffusion(10, peclet=1.0)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    r_jnp = pbicgsafe_solve(op, b, config=cfg, precond=precond,
+                            substrate="jnp")
+    r_pal = pbicgsafe_solve(op, b, config=cfg, precond=precond,
+                            substrate="pallas")
+    assert bool(r_jnp.converged) and bool(r_pal.converged)
+    assert abs(int(r_jnp.iterations) - int(r_pal.iterations)) <= 1
+    np.testing.assert_allclose(np.asarray(r_pal.x), np.asarray(r_jnp.x),
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_batched_preconditioned_matches_single(x64, substrate):
+    """solve_batched with precond: each column reproduces the single-RHS
+    preconditioned solve (same M^{-1} for every column)."""
+    op, b, _ = M.convection_diffusion(8, peclet=1.0)
+    B = jnp.stack([b, 0.5 * b, b + 1.0], axis=1)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    res = solve_batched(op, B, config=cfg, precond="block_jacobi",
+                        substrate=substrate)
+    assert bool(np.asarray(res.converged).all())
+    for j in range(B.shape[1]):
+        rj = pbicgsafe_solve(op, B[:, j], config=cfg,
+                             precond="block_jacobi", substrate=substrate)
+        assert abs(int(res.iterations[j]) - int(rj.iterations)) <= 3
+        np.testing.assert_allclose(np.asarray(res.x[:, j]),
+                                   np.asarray(rj.x), rtol=1e-5, atol=1e-7)
+
+
+def test_all_entry_points_accept_precond(x64):
+    """Every solver entry point takes precond= and still converges to the
+    true solution of the original system."""
+    op, b, xt = M.convection_diffusion(8, peclet=1.0)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    for sname, solve in SOLVERS.items():
+        res = solve(op, b, config=cfg, precond="ssor")
+        assert bool(res.converged), sname
+        err = float(jnp.linalg.norm(res.x - xt) / jnp.linalg.norm(xt))
+        assert err < 1e-5, (sname, err)
+
+
+# ---------------------------------------------------------------------------
+# deterministic instances of the property "preconditioning never needs
+# MORE iterations on the hard problem classes" (the hypothesis sweep over
+# random instances lives in tests/test_precond_properties.py, which skips
+# without hypothesis installed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [1, 3, 7])
+def test_precond_helps_hard_nonsym_instances(x64, seed):
+    op, b, _ = M.hard_nonsym(n=240, seed=seed)
+    cfg = SolverConfig(tol=1e-8, maxiter=1200)
+    plain = pbicgsafe_solve(op, b, config=cfg)
+    prec = pbicgsafe_solve(op, b, config=cfg, precond="block_jacobi")
+    assert bool(prec.converged) and not bool(prec.breakdown)
+    assert int(prec.iterations) <= int(plain.iterations)
+
+
+@pytest.mark.parametrize("eps", [1e-3, 1e-2, 1e-1])
+def test_precond_helps_anisotropic3d_instances(x64, eps):
+    op, b, _ = M.anisotropic3d(8, eps=eps)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    plain = pbicgsafe_solve(op, b, config=cfg)
+    prec = pbicgsafe_solve(op, b, config=cfg, precond="ssor")
+    assert bool(prec.converged) and not bool(prec.breakdown)
+    assert int(prec.iterations) <= int(plain.iterations)
+
+
+# ---------------------------------------------------------------------------
+# diagonal() consistency sweep (every preconditioner bootstraps from it)
+# ---------------------------------------------------------------------------
+
+def _operator_cases():
+    def dense():
+        return M.nonsym_dense(40)[0]
+
+    def csr():
+        return M.random_nonsym(60, 5, seed=2)[0]
+
+    def ell():
+        return ELLOperator.from_csr(M.random_nonsym(60, 5, seed=3)[0])
+
+    def stencil():
+        return M.convection_diffusion(4, peclet=0.7)[0]
+
+    return {"dense": dense, "csr": csr, "ell": ell, "stencil7": stencil}
+
+
+@pytest.mark.parametrize("kind", list(_operator_cases()))
+def test_diagonal_matches_dense_materialization(x64, kind):
+    """diagonal() of all four operator classes agrees with the diagonal
+    of the densely materialized matrix (matvec against the identity)."""
+    op = _operator_cases()[kind]()
+    n = op.shape[0]
+    eye = jnp.eye(n, dtype=op.dtype)
+    dense = jax.vmap(op.matvec, in_axes=1, out_axes=1)(eye)
+    np.testing.assert_allclose(np.asarray(op.diagonal()),
+                               np.asarray(jnp.diagonal(dense)),
+                               rtol=1e-12, atol=1e-12)
+    assert isinstance(op, (DenseOperator, CSROperator, ELLOperator,
+                           Stencil7Operator))

@@ -126,7 +126,7 @@ def _while_body(jaxpr):
     return body
 
 
-def _reduction_sees_matvec(solve, op, b, substrate) -> bool:
+def _reduction_sees_matvec(solve, op, b, substrate, precond=None) -> bool:
     """Structural overlap probe (bench_overlap-style, single process).
 
     The matvec output and the fused-dot partials are both tagged with
@@ -148,6 +148,13 @@ def _reduction_sees_matvec(solve, op, b, substrate) -> bool:
         mv = lambda x: lax.optimization_barrier(op.matvec(x))  # noqa: E731
         solve_kw = {}
 
+    if precond is not None:
+        # instances only: the probe hands the solver a tagged CALLABLE,
+        # which a name spec could not build from.  The matvec tag sits
+        # inside the M^{-1} ∘ A composition, so "reduction needs the tag"
+        # still captures any edge to the in-flight precond+matvec (the
+        # apply is strictly downstream of the tag).
+        solve_kw["precond"] = precond
     jaxpr = jax.make_jaxpr(lambda bb: solve(
         mv, bb, config=SolverConfig(maxiter=10), dot_reduce=spy,
         substrate=substrate, **solve_kw))(b)
@@ -187,6 +194,74 @@ def test_overlap_edge_survives_substrate_refactor(x64, substrate):
 
 
 @pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("pname", ["jacobi", "block_jacobi", "neumann"])
+def test_overlap_edge_survives_preconditioning(x64, substrate, pname):
+    """The tentpole invariant of the preconditioned pipelined method: the
+    M^{-1}-apply joins the in-flight matvec INSIDE the overlap window, so
+    the fused reduction still has no dependency path to it — while
+    preconditioned ssBiCGSafe2 (whose dots consume the fresh
+    preconditioned matvec) must keep the edge."""
+    from repro.precond import resolve_precond
+    op, b, _ = M.nonsym_dense(64)
+    pc = resolve_precond(pname, op)
+    assert not _reduction_sees_matvec(pbicgsafe_solve, op, b, substrate,
+                                      precond=pc)
+    assert _reduction_sees_matvec(ssbicgsafe2_solve, op, b, substrate,
+                                  precond=pc)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_overlap_edge_survives_precond_batching(x64, substrate):
+    """Preconditioned + batched: the (9, m) block reduction keeps no path
+    from the in-flight preconditioned BLOCK matvec."""
+    from repro.precond import block_jacobi
+    op, b, _ = M.nonsym_dense(64)
+    B = jnp.stack([b, 0.5 * b, b + 1.0], axis=1)
+    assert not _reduction_sees_matvec(solve_batched, op, B, substrate,
+                                      precond=block_jacobi(op, 16))
+
+
+# the per-solver reduction-phase table of test_solvers (single source of
+# truth), which preconditioning must NOT change (no preconditioner
+# computes an inner product); cgs only appears here because its
+# unpreconditioned count is asserted by test_converges_* instead
+from test_solvers import SYNC_COUNTS as _SYNC_COUNTS  # noqa: E402
+
+PRECOND_SYNC_COUNTS = dict(_SYNC_COUNTS, cgs=(1, 2))
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("sname", list(PRECOND_SYNC_COUNTS))
+def test_sync_count_preconditioned(x64, substrate, sname):
+    """Preconditioning leaves every solver's synchronization count
+    untouched, on either substrate (all preconditioned paths)."""
+    op, b, _ = M.nonsym_dense(64)
+    counter = SyncCounter(identity_reduce)
+    jax.make_jaxpr(
+        lambda bb: SOLVERS[sname](op, bb,
+                                  config=SolverConfig(maxiter=10),
+                                  dot_reduce=counter,
+                                  substrate=substrate,
+                                  precond="block_jacobi"))(b)
+    init, per_iter = PRECOND_SYNC_COUNTS[sname]
+    assert counter.calls == init + per_iter, (
+        f"{sname}: preconditioning changed the reduce count "
+        f"({counter.calls} != {init}+{per_iter})")
+
+
+def test_sync_count_preconditioned_batched(x64):
+    """solve_batched with precond: still exactly one (9, m) reduction per
+    iteration for any m."""
+    op, b, _ = M.poisson3d(8)
+    for m in (1, 3):
+        counter = SyncCounter(identity_reduce)
+        jax.make_jaxpr(lambda bb: solve_batched(
+            op, bb, config=SolverConfig(maxiter=10),
+            dot_reduce=counter, precond="ssor"))(_rhs_block(b, m))
+        assert counter.calls == 2, (m, counter.calls)   # init + 1/iter
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
 def test_overlap_edge_survives_batching(x64, substrate):
     """The (9, m) fused block reduction of solve_batched still has no
     dependency path from the in-flight BLOCK matvec — batching the
@@ -202,7 +277,8 @@ def test_overlap_edge_survives_batching(x64, substrate):
 
 @pytest.mark.parametrize("substrate", ["jnp", "pallas"])
 @pytest.mark.parametrize("m", [1, 4])
-def test_sharded_batched_single_psum_per_iter(x64, substrate, m):
+@pytest.mark.parametrize("precond", [None, "block_jacobi"])
+def test_sharded_batched_single_psum_per_iter(x64, substrate, m, precond):
     """The sharded batched solve lowers to EXACTLY ONE psum per iteration
     — the (9, m) block — for any m and either substrate (the paper's
     one-synchronization property).  A 1-device mesh suffices for the
@@ -218,7 +294,7 @@ def test_sharded_batched_single_psum_per_iter(x64, substrate, m):
     mesh = make_mesh((1,), ("rows",))
     jaxpr = jax.make_jaxpr(lambda BB: distributed_stencil_solve_batched(
         op, BB, mesh, config=SolverConfig(maxiter=10),
-        substrate=substrate, jit=False))(B_grid)
+        substrate=substrate, precond=precond, jit=False))(B_grid)
     body = _find_while_body(jaxpr.jaxpr)
     assert body is not None, "no while loop in the sharded batched solve"
     assert _count_prim(body, "psum") == 1, "must be ONE reduction/iter"

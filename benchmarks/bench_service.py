@@ -1,0 +1,258 @@
+"""Continuous-batching solve service vs. sequential / static-batch serving.
+
+A Poisson stream of N heterogeneous solve requests (mixed tolerances)
+against one operator is served three ways, all warm-compiled, all on the
+same arrival trace:
+
+* sequential — one single-RHS solve at a time, FIFO (the "library call"
+              serving model every entry point had before repro.service);
+* static    — FIFO batches of max_batch: wait until the batch is full
+              (or the stream ends), then one ``solve_batched`` call; a
+              batch holds its early arrivals hostage and its whole wall
+              time is the SLOWEST column's convergence;
+* engine    — :class:`repro.service.SolveEngine` continuous batching:
+              one resident (n, max_batch) block, converged columns
+              retire at chunk boundaries and freed slots are refilled
+              mid-flight, ONE (9, m) reduction per iteration for the
+              whole block regardless of request mix.
+
+Two measurement phases, standard serving methodology:
+
+* capacity (throughput) — saturated burst: every request is already
+  queued at t=0, so the span from start to last completion is pure
+  serving capacity, with no arrival-pacing or sleep-granularity noise.
+  The acceptance bar (asserted): at max_batch >= 8 the engine beats
+  sequential serving on burst throughput.
+* latency — the Poisson stream is replayed in wall-clock time at ~2x the
+  sequential capacity (an overloaded server, where queueing discipline
+  matters); per-request latency is completion minus scheduled arrival,
+  reported as p50/p99.
+
+Artifact: experiments/bench_service.json.
+
+  PYTHONPATH=src python -m benchmarks.run --only service
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import fmt_table, write_json
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _problem(nx: int):
+    from repro.core import matrices as M
+    return M.convection_diffusion(nx, peclet=1.0)
+
+
+def _percentiles(lats_ms):
+    a = np.asarray(lats_ms)
+    return dict(p50_ms=float(np.percentile(a, 50)),
+                p99_ms=float(np.percentile(a, 99)),
+                mean_ms=float(a.mean()), max_ms=float(a.max()))
+
+
+def _mode_summary(name, lats, t_span, n):
+    out = dict(mode=name, n_requests=n,
+               throughput_rps=float(n / t_span), **_percentiles(
+                   [l * 1e3 for l in lats]))
+    return out
+
+
+def _tolv(vals):
+    """Tolerance vector with a stable aval (no weak_type churn between
+    the warm-up call and the serving calls — that would recompile)."""
+    return jnp.asarray(np.asarray(vals, np.float64))
+
+
+def _wait_until(t_abs):
+    d = t_abs - time.perf_counter()
+    if d > 0:
+        time.sleep(d)
+
+
+def serve_sequential(op, B, tols, arrivals, cfg):
+    """FIFO, one single-RHS solve at a time (tol passed as a traced
+    (1,) vector so every request shares ONE compiled program)."""
+    from repro.core import solve_batched
+
+    fn = jax.jit(lambda b, tol: solve_batched(
+        op.matvec, b[:, None], config=cfg, tol=tol))
+    # warm with the exact aval (incl. weak_type) of the serving calls
+    jax.block_until_ready(fn(B[:, 0], _tolv([tols[0]])).x)
+
+    n = B.shape[1]
+    lats, conv = [], []
+    t0 = time.perf_counter()
+    arr = t0 + arrivals
+    for i in range(n):
+        _wait_until(arr[i])
+        res = fn(B[:, i], _tolv([tols[i]]))
+        jax.block_until_ready(res.x)
+        lats.append(time.perf_counter() - arr[i])
+        conv.append(bool(res.converged[0]))
+    span = time.perf_counter() - t0
+    assert all(conv), "sequential serving must converge every request"
+    return _mode_summary("sequential", lats, span, n)
+
+
+def serve_static_batch(op, B, tols, arrivals, cfg, max_batch):
+    """FIFO batches of max_batch; each batch launches when its last
+    member has arrived and completes when its SLOWEST column converges."""
+    from repro.core import solve_batched
+
+    fn = jax.jit(lambda BB, tt: solve_batched(op.matvec, BB, config=cfg,
+                                              tol=tt))
+    n = B.shape[1]
+    pad_B = jnp.tile(B[:, :1], (1, max_batch))
+    jax.block_until_ready(fn(pad_B, _tolv([1e-8] * max_batch)).x)
+
+    lats, conv = [], []
+    t0 = time.perf_counter()
+    arr = t0 + arrivals
+    for lo in range(0, n, max_batch):
+        idx = list(range(lo, min(lo + max_batch, n)))
+        pad = idx + [idx[-1]] * (max_batch - len(idx))   # ragged tail
+        _wait_until(arr[idx[-1]])                        # batch is full
+        res = fn(B[:, pad], _tolv([tols[j] for j in pad]))
+        jax.block_until_ready(res.x)
+        fin = time.perf_counter()
+        for j in idx:
+            lats.append(fin - arr[j])
+        conv.extend(np.asarray(res.converged)[:len(idx)].tolist())
+    span = time.perf_counter() - t0
+    assert all(conv), "static-batch serving must converge every request"
+    return _mode_summary("static-batch", lats, span, n)
+
+
+def serve_engine(op, B, tols, arrivals, scfg):
+    """Continuous batching: submit each request when it arrives, poll
+    chunks, retire/refill mid-flight."""
+    from repro.service import SolveEngine
+
+    eng = SolveEngine(scfg, clock=time.perf_counter)
+    name = eng.register(op)
+    n = B.shape[1]
+
+    # warm every program (init + step + splice) on a dummy stream, then
+    # let the blocks drain; the registry keeps the compilations
+    for j in range(scfg.max_batch + 1):
+        eng.submit(name, B[:, j % n], tol=1e-6)
+    eng.run()
+
+    lats, results = {}, []
+    t0 = time.perf_counter()
+    arr = t0 + arrivals
+    rid_of = {}
+    i = 0
+    while i < n or eng.has_work():
+        now = time.perf_counter()
+        while i < n and arr[i] <= now:
+            rid_of[eng.submit(name, B[:, i], tol=float(tols[i]))] = i
+            i += 1
+        if eng.has_work():
+            done = eng.poll()
+            fin = time.perf_counter()
+            for r in done:
+                lats[rid_of[r.rid]] = fin - arr[rid_of[r.rid]]
+                results.append(r)
+        elif i < n:
+            _wait_until(arr[i])
+    span = time.perf_counter() - t0
+    assert len(results) == n
+    assert all(r.converged for r in results), \
+        "engine serving must converge every request"
+    chunks = [r.telemetry.chunks_resident for r in results]
+    out = _mode_summary("engine", [lats[j] for j in range(n)], span, n)
+    out["mean_chunks_resident"] = float(np.mean(chunks))
+    out["mean_queue_wait_ms"] = float(np.mean(
+        [r.telemetry.queue_wait_s for r in results]) * 1e3)
+    return out
+
+
+def run(quick: bool = False):
+    from repro.core import SolverConfig
+    from repro.service import ServiceConfig
+
+    print("\n== bench_service (continuous batching vs sequential/static) ==")
+    # A serving benchmark scales LOAD (request count), not problem size:
+    # n stays in the regime where serving discipline is what's measured —
+    # per-request overheads + iteration-count heterogeneity dominate, and
+    # the resident block amortizes them across requests.  (On CPU the
+    # (n, m) vector phases cost ~m x a single column — the paper's
+    # per-iteration HBM/reduction amortization is a TPU/distributed
+    # property — so very large n on CPU measures raw vector bandwidth,
+    # not serving.)
+    nx = 8
+    max_batch = 8
+    n_req = 4 * max_batch if quick else 12 * max_batch
+    op, b, _ = _problem(nx)
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    # chunk ~ half the typical iteration count: refills land mid-solve,
+    # keeping slot utilization high without per-chunk host-overhead churn
+    scfg = ServiceConfig(max_batch=max_batch, chunk=12,
+                         tol=1e-8, maxiter=2000)
+
+    rng = np.random.default_rng(42)
+    B = jnp.asarray(rng.standard_normal((op.n, n_req)))
+    tols = [float(t) for t in rng.choice([1e-6, 1e-8], size=n_req)]
+    modes = dict(
+        sequential=lambda arr: serve_sequential(op, B, tols, arr, cfg),
+        static=lambda arr: serve_static_batch(op, B, tols, arr, cfg,
+                                              max_batch),
+        engine=lambda arr: serve_engine(op, B, tols, arr, scfg))
+
+    # -- phase 1: saturated-burst capacity (the asserted comparison) ----
+    burst = np.zeros(n_req)
+    reps = 2 if quick else 3
+    cap = {name: max((f(burst) for _ in range(reps)),
+                     key=lambda s: s["throughput_rps"])
+           for name, f in modes.items()}
+    print(f"n={op.n}, N={n_req}, max_batch={max_batch}, "
+          f"chunk={scfg.chunk} (burst capacity, best of {reps})")
+
+    # -- phase 2: Poisson stream at 1.2x sequential capacity (latency) --
+    # moderate overload: the sequential server's queue grows, the engine
+    # absorbs it, and static batching's head-of-line blocking (waiting
+    # for a batch to fill, then for its slowest column) is visible
+    # rather than hidden by saturation
+    rate = 1.2 * cap["sequential"]["throughput_rps"]
+    arrivals = rng.exponential(1.0 / rate, size=n_req).cumsum()
+    lat = {name: f(arrivals) for name, f in modes.items()}
+
+    headers = ["mode", "N", "capacity rps", "p50 ms @1.2x",
+               "p99 ms @1.2x", "mean ms @1.2x"]
+    rows = [[name, n_req, f"{cap[name]['throughput_rps']:.1f}",
+             f"{lat[name]['p50_ms']:.1f}", f"{lat[name]['p99_ms']:.1f}",
+             f"{lat[name]['mean_ms']:.1f}"] for name in modes]
+    print(fmt_table(rows, headers))
+
+    speedup = (cap["engine"]["throughput_rps"]
+               / cap["sequential"]["throughput_rps"])
+    print(f"continuous batching vs sequential: {speedup:.2f}x capacity, "
+          f"p99 under 1.2x load {lat['sequential']['p99_ms']:.0f}ms -> "
+          f"{lat['engine']['p99_ms']:.0f}ms")
+    assert speedup > 1.0, (
+        f"continuous batching must beat sequential serving on throughput "
+        f"at max_batch={max_batch} (got {speedup:.2f}x)")
+
+    write_json("bench_service.json", {
+        "config": dict(n=op.n, n_requests=n_req, max_batch=max_batch,
+                       chunk=scfg.chunk, offered_rate_rps=rate,
+                       capacity_reps=reps, quick=quick,
+                       tol_mix=sorted(set(tols))),
+        "capacity_burst": cap,
+        "latency_poisson_1p2x": lat,
+        "throughput_speedup_vs_sequential": speedup,
+        "headers": headers, "rows": rows,
+    })
+    return speedup
+
+
+if __name__ == "__main__":
+    run()

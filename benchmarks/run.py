@@ -10,6 +10,8 @@
   bench_roofline      §Roofline            (terms from dry-run artifacts)
   bench_multirhs      multi-RHS            (batched vs looped solves)
   bench_precond       preconditioning      (precond vs not, per solver)
+  bench_service       solve service        (continuous batching vs
+                                            sequential / static batch)
 
 Artifacts land in experiments/*.json; stdout is the human summary.
 """
@@ -31,7 +33,7 @@ def main() -> None:
 
     from . import (bench_convergence, bench_cost, bench_multirhs,
                    bench_overlap, bench_precond, bench_roofline, bench_rr,
-                   bench_scaling)
+                   bench_scaling, bench_service)
 
     benches = {
         "convergence": bench_convergence.run,
@@ -42,6 +44,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "multirhs": bench_multirhs.run,
         "precond": bench_precond.run,
+        "service": bench_service.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -16,7 +16,11 @@ Public API:
   (:mod:`repro.core.substrate`) selecting who computes the fused dot /
   vector-update / SpMV phases of the hot loop.
 * Multi-RHS: :func:`solve_batched` solves ``A X = B`` for ``(n, m)``
-  right-hand sides with per-RHS convergence, one reduction per iteration.
+  right-hand sides with per-RHS convergence (per-column ``tol=``
+  vectors supported), one reduction per iteration; the iteration is
+  also exposed open-loop as :func:`init_state` / :func:`step_chunk` /
+  :func:`splice_columns`, which the continuous-batching solve service
+  (:mod:`repro.service`) drives.
 * Preconditioning: every solver entry point (including the batched and
   distributed drivers) takes ``precond=`` — a name or a
   :class:`repro.precond.Preconditioner` (Jacobi / block-Jacobi / Neumann
@@ -41,7 +45,8 @@ from .pipelined_bicgstab import pbicgstab_solve
 from .gpbicg import gpbicg_solve
 from .ssbicgsafe import ssbicgsafe2_solve
 from .pipelined_bicgsafe import pbicgsafe_solve, pbicgsafe_rr_solve
-from .multirhs import solve_batched
+from .multirhs import (init_state, solve_batched, splice_columns,
+                       step_chunk)
 
 SOLVERS = {
     "bicgstab": bicgstab_solve,
@@ -64,6 +69,6 @@ __all__ = [
     "get_substrate",
     "bicgstab_solve", "pbicgstab_solve", "gpbicg_solve",
     "ssbicgsafe2_solve", "pbicgsafe_solve", "pbicgsafe_rr_solve",
-    "solve_batched",
+    "solve_batched", "init_state", "step_chunk", "splice_columns",
     "SOLVERS",
 ]

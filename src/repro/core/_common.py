@@ -49,6 +49,14 @@ independence from the in-flight matvec hold in every cell — asserted in
 tests/test_substrate_parity.py, tests/_distributed_check.py and
 benchmarks/bench_overlap.py.)
 
+The batched row is also exposed open-loop — ``multirhs.init_state`` /
+``step_chunk`` / ``splice_columns`` — which is what the
+continuous-batching solve service (:mod:`repro.service`) drives: one
+resident (n, max_batch) block per operator, heterogeneous requests
+multiplexed onto its columns, same single (9, m) reduction and overlap
+structure per iteration (asserted on the engine's step program in
+tests/test_service.py).
+
 Preconditioning (the ``precond=`` column of every cell above; see
 :mod:`repro.precond`) — how each M^{-1}-apply executes per substrate,
 and its distributed locality:

@@ -26,6 +26,32 @@ in-kernel) and the block-ELL SpMV are the hand-tiled kernels, and on the
 distributed driver (:func:`repro.core.distributed
 .distributed_stencil_solve_batched`) the same iteration runs per shard
 with the (9, m) partial block reduced by ONE psum.
+
+Open-loop API (the substrate of :mod:`repro.service`)
+-----------------------------------------------------
+The iteration is exposed in three jit-friendly pieces so a *continuous
+batching* serving layer can keep one resident (n, max_batch) block alive
+across heterogeneous requests:
+
+* :func:`init_state`      — build the per-column Krylov state pytree,
+* :func:`step_chunk`      — advance ALL columns by up to k iterations with
+                            ONE compiled program (early-exits when every
+                            column is frozen; still one (9, m) reduction
+                            per iteration),
+* :func:`splice_columns`  — retire/refill: overwrite a masked subset of
+                            columns with fresh right-hand sides and reset
+                            per-column Krylov state, mid-flight.  Columns
+                            are independent in "individual" blocked mode,
+                            so splicing is exact — the surviving columns'
+                            trajectories are untouched.
+
+State is per-column throughout: ``tol`` and ``maxiter`` are ``(m,)``
+vectors (scalars broadcast via :func:`repro.core.types.per_column`) and
+the i=0 coefficient branch keys off each column's OWN iteration count, so
+a column spliced into a long-running block starts from its proper first
+iteration.  :func:`solve_batched` is the closed-loop wrapper: init + one
+chunk of ``config.maxiter`` iterations (behavior-preserving — the
+refactor is regression-pinned bitwise in tests/test_substrate_parity.py).
 """
 from __future__ import annotations
 
@@ -37,7 +63,8 @@ import jax.numpy as jnp
 from ..precond.base import PrecondLike, wrap_block_preconditioned
 from ._common import bicgsafe_coefficients, pipelined_recurrence_tail
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, identity_reduce)
+from .types import (DotReduce, SolveResult, SolverConfig, identity_reduce,
+                    per_column)
 
 
 def _masked(mask_cols, new, old):
@@ -68,58 +95,46 @@ def batched_matvec(matvec: Callable) -> Callable:
     return jax.vmap(matvec, in_axes=1, out_axes=1)
 
 
-def solve_batched(matvec: Callable,
-                  B: jax.Array,
-                  X0: Optional[jax.Array] = None,
-                  *,
-                  config: SolverConfig = SolverConfig(),
-                  r0_star: Optional[jax.Array] = None,
-                  dot_reduce: DotReduce = identity_reduce,
-                  substrate: SubstrateLike = "jnp",
-                  blocked: bool = False,
-                  precond: PrecondLike = None) -> SolveResult:
-    """Solve A X = B with p-BiCGSafe for all m columns of B at once.
+def active_columns(state: dict) -> jax.Array:
+    """(m,) bool: columns still iterating (not converged / broken down /
+    past their per-column iteration budget)."""
+    return ((~state["converged"]) & (~state["breakdown"])
+            & (state["iterations"] < state["col_maxiter"]))
+
+
+def init_state(bmv: Callable,
+               B: jax.Array,
+               X0: Optional[jax.Array] = None,
+               *,
+               config: SolverConfig = SolverConfig(),
+               r0_star: Optional[jax.Array] = None,
+               dot_reduce: DotReduce = identity_reduce,
+               substrate: SubstrateLike = "jnp",
+               tol=None,
+               maxiter=None) -> dict:
+    """Build the batched p-BiCGSafe state pytree for ``A X = B``.
 
     Args:
-      matvec: single-vector matvec (n,) -> (n,); lifted to column blocks
-        by the substrate (vmap, or the block-ELL kernel for banded ELL
-        operators on the pallas substrate).  May also be an operator
-        accepted by the substrate.
+      bmv: the ``(n, m) -> (n, m)`` block matvec — already lifted (and
+        already left-preconditioned, with ``B`` the preconditioned block,
+        when preconditioning is in play; :func:`solve_batched` and the
+        service registry do this composition).
       B: (n, m) right-hand sides.
       X0: optional (n, m) initial guesses.
-      config/r0_star/dot_reduce/substrate: as for the single-RHS solvers;
-        ``r0_star`` is a single (n,) shadow vector shared by all columns
-        or an (n, m) block of per-column shadows.
-      blocked: the given ``matvec`` already maps (n, m) column blocks to
-        (n, m) — used by the distributed driver, whose halo-exchange
-        matvec streams whole blocks (one ppermute cascade for all m).
-      precond: optional left preconditioner (name or
-        :class:`repro.precond.Preconditioner`): the solve runs on
-        M^{-1} A with M^{-1} B, every column through the SAME M^{-1}
-        (its apply is column-batched, in-kernel for block-Jacobi on the
-        pallas substrate), still ONE (9, m) reduction per iteration.
-        With ``blocked=True`` pass an instance — name specs need the
-        operator object to build from.
+      config/r0_star/dot_reduce/substrate: as for :func:`solve_batched`.
+      tol: per-column tolerance — scalar or (m,); defaults to
+        ``config.tol`` for every column.
+      maxiter: per-column iteration budget — scalar or (m,); defaults to
+        ``config.maxiter``.  A column stops advancing once its OWN count
+        reaches its budget (:func:`active_columns`), which is what lets
+        heterogeneous requests share one block.
 
-    Returns a :class:`SolveResult` with column-batched fields: ``x`` is
-    (n, m); ``iterations``, ``relres``, ``converged``, ``breakdown`` are
-    (m,); ``residual_history`` is (maxiter+1, m) when recorded.
-
-    One ``dot_reduce`` call per iteration regardless of m (the (9, m)
-    partial block is one message), plus one for ||r_0||.  The whole
-    per-iteration vector phase — fused dots, update phase, block SpMV —
-    runs through the substrate, so ``substrate="pallas"`` executes it on
-    the hand-tiled (n, m) kernels with the per-column convergence mask
-    applied in-kernel.
+    Costs one ``dot_reduce`` (the per-column ||r_0||) plus one block
+    matvec (S_0 = A R_0; two with a nonzero ``X0``).  The returned dict is
+    a pytree of arrays only — it jits, donates, and shards cleanly.
     """
-    if B.ndim != 2:
-        raise ValueError(f"B must be (n, m); got shape {B.shape}")
     sub = get_substrate(substrate)
-    bmv = matvec if blocked else sub.as_block_matvec(matvec)
-    bmv, B = wrap_block_preconditioned(sub, bmv, B, precond, matvec)
     n, m = B.shape
-    eps = config.breakdown_threshold(B.dtype)
-
     X = jnp.zeros_like(B) if X0 is None else X0.astype(B.dtype)
     R0 = B - bmv(X) if X0 is not None else B
     if r0_star is None:
@@ -138,32 +153,137 @@ def solve_batched(matvec: Callable,
     else:
         hist = jnp.zeros((0, m), norm_r0.dtype)
 
-    state = dict(
+    tol_col = per_column(config.tol if tol is None else tol,
+                         m, norm_r0.dtype, name="tol")
+    maxiter_col = per_column(config.maxiter if maxiter is None else maxiter,
+                             m, jnp.int32, name="maxiter")
+
+    return dict(
         x=X, r=R0, s=S0, p=Z0, u=Z0, t=Z0, y=Z0, z=Z0, w=Z0, l=Z0, g=Z0,
+        rs=RS,
         alpha=jnp.zeros((m,), B.dtype), zeta=ones_m, f=ones_m,
         i=jnp.zeros((), jnp.int32),
         iterations=jnp.zeros((m,), jnp.int32),
         relres=jnp.ones((m,), norm_r0.dtype),
         converged=jnp.zeros((m,), bool), breakdown=jnp.zeros((m,), bool),
+        norm_r0=norm_r0, tol=tol_col, col_maxiter=maxiter_col,
         hist=hist)
 
-    def cond(st):
-        active = (~st["converged"]) & (~st["breakdown"])
-        return jnp.any(active) & (st["i"] < config.maxiter)
+
+def splice_columns(bmv: Callable,
+                   state: dict,
+                   refill: jax.Array,
+                   B_new: jax.Array,
+                   *,
+                   r0_star: Optional[jax.Array] = None,
+                   dot_reduce: DotReduce = identity_reduce,
+                   substrate: SubstrateLike = "jnp",
+                   tol=None,
+                   maxiter=None) -> dict:
+    """Refill a masked subset of columns with fresh right-hand sides.
+
+    Args:
+      bmv: the block matvec the state is being stepped with.
+      state: live state pytree from :func:`init_state` / :func:`step_chunk`.
+      refill: (m,) bool — True columns are overwritten, False columns are
+        carried through bit-untouched (columns are independent in
+        "individual" blocked mode, so this is exact, not approximate).
+      B_new: (n, m) block holding the fresh right-hand sides in the True
+        columns (other columns are ignored).  Fresh columns start from
+        x0 = 0.
+      r0_star: optional (n,) / (n, m) shadow residual for the fresh
+        columns (defaults to their r_0, as in :func:`init_state`).
+      tol/maxiter: per-column settings for the fresh columns — scalar or
+        (m,) (entries of False columns are ignored).
+
+    Costs one block matvec (A R_0 of the fresh columns, computed on the
+    full block so the splice is ONE compiled program for any refill
+    count — the frozen columns ride along as zero columns) and one
+    ``dot_reduce``.  The global step counter ``i`` (history indexing) is
+    preserved; every per-column field of the fresh columns is reset
+    exactly as :func:`init_state` builds it.
+    """
+    m = state["r"].shape[1]
+    sub = get_substrate(substrate)
+    refill = refill.astype(bool)
+    col = refill[None, :]
+    B_live = jnp.where(col, B_new.astype(state["r"].dtype), 0.0)
+    S0 = bmv(B_live)             # zero columns stay zero: bmv is linear
+    norm_new = jnp.sqrt(dot_reduce(sub.dots([(B_live, B_live)]))[0])
+
+    if r0_star is None:
+        RS_new = B_live
+    else:
+        RS_new = r0_star.astype(B_live.dtype)
+        if RS_new.ndim == 1:
+            RS_new = jnp.broadcast_to(RS_new[:, None], B_live.shape)
+
+    dt = state["r"].dtype
+    tol_col = per_column(state["tol"] if tol is None else tol,
+                         m, state["tol"].dtype, name="tol")
+    maxiter_col = per_column(
+        state["col_maxiter"] if maxiter is None else maxiter,
+        m, jnp.int32, name="maxiter")
+
+    def vec(new, old):                      # (n, m) fields
+        return jnp.where(col, new, old)
+
+    def sca(new, old):                      # (m,) fields
+        return jnp.where(refill, new, old)
+
+    zero_m = jnp.zeros((m,), dt)
+    out = dict(state)
+    out["x"] = vec(jnp.zeros_like(B_live), state["x"])
+    out["r"] = vec(B_live, state["r"])
+    out["s"] = vec(S0, state["s"])
+    out["rs"] = vec(RS_new, state["rs"])
+    for k in ("p", "u", "t", "y", "z", "w", "l", "g"):
+        out[k] = vec(jnp.zeros_like(B_live), state[k])
+    out["alpha"] = sca(zero_m, state["alpha"])
+    out["zeta"] = sca(jnp.ones((m,), dt), state["zeta"])
+    out["f"] = sca(jnp.ones((m,), dt), state["f"])
+    out["iterations"] = sca(jnp.zeros((m,), jnp.int32), state["iterations"])
+    out["relres"] = sca(jnp.ones((m,), state["relres"].dtype),
+                        state["relres"])
+    out["converged"] = sca(jnp.zeros((m,), bool), state["converged"])
+    out["breakdown"] = sca(jnp.zeros((m,), bool), state["breakdown"])
+    out["norm_r0"] = sca(norm_new, state["norm_r0"])
+    out["tol"] = sca(tol_col, state["tol"])
+    out["col_maxiter"] = sca(maxiter_col, state["col_maxiter"])
+    if state["hist"].shape[0]:
+        out["hist"] = jnp.where(col, jnp.nan, state["hist"])
+    return out
+
+
+def _make_body(sub, bmv: Callable, config: SolverConfig,
+               dot_reduce: DotReduce) -> Callable:
+    """One batched p-BiCGSafe iteration: state dict -> state dict.
+
+    Shared verbatim by :func:`solve_batched` and :func:`step_chunk` — the
+    single (9, m) reduction, the in-kernel convergence mask, and the
+    overlap structure live here and ONLY here.
+    """
 
     def body(st):
         r, s, y, t_prev = st["r"], st["s"], st["y"], st["t"]
-        active = (~st["converged"]) & (~st["breakdown"])          # (m,)
+        RS = st["rs"]
+        eps = config.breakdown_threshold(r.dtype)
+        active = active_columns(st)                               # (m,)
 
         # Block MV and the single fused (9, m) reduction — mutually
         # independent, exactly as in the m=1 pipelined iteration.
         As = bmv(s)
         dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, RS))
 
+        # Each column's i=0 branch keys off its OWN iteration count, so a
+        # freshly spliced column in a long-running block initializes its
+        # coefficients correctly (for a monolithic solve this is
+        # indistinguishable from the global counter).
         beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
-            dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)   # (m,)
-        relres = jnp.sqrt(jnp.abs(rr)) / norm_r0
-        done = relres <= config.tol
+            dots, st["iterations"], st["alpha"], st["zeta"], st["f"],
+            eps)                                                  # (m,)
+        relres = jnp.sqrt(jnp.abs(rr)) / st["norm_r0"]
+        done = relres <= st["tol"]
 
         # Per-RHS freeze mask: only active-and-unfinished columns advance;
         # converged / broken-down columns stay at their final state.
@@ -201,15 +321,125 @@ def solve_batched(matvec: Callable,
             x=x_next, r=r_next, s=upd(s_next, s),
             p=p, u=u, t=t, y=y_next, z=z, w=w,
             l=upd(l, st["l"]), g=upd(g_next, st["g"]),
+            rs=RS,
             alpha=upd(alpha, st["alpha"]), zeta=upd(zeta, st["zeta"]),
             f=upd(f, st["f"]),
             i=st["i"] + 1,
-            iterations=jnp.where(advance, st["i"] + 1, st["iterations"]),
+            iterations=jnp.where(advance, st["iterations"] + 1,
+                                 st["iterations"]),
             relres=relres_out,
             converged=st["converged"] | (active & done),
             breakdown=st["breakdown"] | (active & bad & ~done),
+            norm_r0=st["norm_r0"], tol=st["tol"],
+            col_maxiter=st["col_maxiter"],
             hist=hist_i)
 
-    st = jax.lax.while_loop(cond, body, state)
-    return SolveResult(st["x"], st["iterations"], st["relres"],
-                       st["converged"], st["breakdown"], st["hist"])
+    return body
+
+
+def step_chunk(bmv: Callable,
+               state: dict,
+               k: int,
+               *,
+               config: SolverConfig = SolverConfig(),
+               dot_reduce: DotReduce = identity_reduce,
+               substrate: SubstrateLike = "jnp") -> dict:
+    """Advance every live column by up to ``k`` iterations.
+
+    ONE ``lax.while_loop`` — hence one compiled program per (shape, k)
+    regardless of which request mix occupies the columns — that exits
+    early once every column is frozen (converged, broken down, or past
+    its per-column budget).  Each executed iteration performs exactly one
+    ``dot_reduce`` of the (9, m) partial block, with no dependency edge
+    to the in-flight block matvec (asserted on the engine's step program
+    in tests/test_service.py).
+
+    ``k`` must be static under jit (it bounds the loop).  The global
+    counter ``state["i"]`` keeps counting across chunks; per-column
+    ``iterations`` count from each column's own start (splice resets
+    them).
+    """
+    body = _make_body(get_substrate(substrate), bmv, config, dot_reduce)
+
+    def cond(carry):
+        j, st = carry
+        return jnp.any(active_columns(st)) & (j < k)
+
+    def step(carry):
+        j, st = carry
+        return j + 1, body(st)
+
+    _, st = jax.lax.while_loop(cond, step, (jnp.zeros((), jnp.int32), state))
+    return st
+
+
+def result_from_state(state: dict) -> SolveResult:
+    """Package a state pytree as the public :class:`SolveResult`."""
+    return SolveResult(state["x"], state["iterations"], state["relres"],
+                       state["converged"], state["breakdown"],
+                       state["hist"])
+
+
+def solve_batched(matvec: Callable,
+                  B: jax.Array,
+                  X0: Optional[jax.Array] = None,
+                  *,
+                  config: SolverConfig = SolverConfig(),
+                  r0_star: Optional[jax.Array] = None,
+                  dot_reduce: DotReduce = identity_reduce,
+                  substrate: SubstrateLike = "jnp",
+                  blocked: bool = False,
+                  precond: PrecondLike = None,
+                  tol=None) -> SolveResult:
+    """Solve A X = B with p-BiCGSafe for all m columns of B at once.
+
+    Args:
+      matvec: single-vector matvec (n,) -> (n,); lifted to column blocks
+        by the substrate (vmap, or the block-ELL kernel for banded ELL
+        operators on the pallas substrate).  May also be an operator
+        accepted by the substrate.
+      B: (n, m) right-hand sides.
+      X0: optional (n, m) initial guesses.
+      config/r0_star/dot_reduce/substrate: as for the single-RHS solvers;
+        ``r0_star`` is a single (n,) shadow vector shared by all columns
+        or an (n, m) block of per-column shadows.
+      blocked: the given ``matvec`` already maps (n, m) column blocks to
+        (n, m) — used by the distributed driver, whose halo-exchange
+        matvec streams whole blocks (one ppermute cascade for all m).
+      precond: optional left preconditioner (name or
+        :class:`repro.precond.Preconditioner`): the solve runs on
+        M^{-1} A with M^{-1} B, every column through the SAME M^{-1}
+        (its apply is column-batched, in-kernel for block-Jacobi on the
+        pallas substrate), still ONE (9, m) reduction per iteration.
+        With ``blocked=True`` pass an instance — name specs need the
+        operator object to build from.
+      tol: per-column tolerance — scalar or ``(m,)`` vector (heterogeneous
+        right-hand sides each converge against their own tolerance);
+        defaults to ``config.tol`` broadcast to every column.
+
+    Returns a :class:`SolveResult` with column-batched fields: ``x`` is
+    (n, m); ``iterations``, ``relres``, ``converged``, ``breakdown`` are
+    (m,); ``residual_history`` is (maxiter+1, m) when recorded.
+
+    One ``dot_reduce`` call per iteration regardless of m (the (9, m)
+    partial block is one message), plus one for ||r_0||.  The whole
+    per-iteration vector phase — fused dots, update phase, block SpMV —
+    runs through the substrate, so ``substrate="pallas"`` executes it on
+    the hand-tiled (n, m) kernels with the per-column convergence mask
+    applied in-kernel.
+
+    This is the closed-loop wrapper over the open-loop API: one
+    :func:`init_state` plus one :func:`step_chunk` of ``config.maxiter``
+    iterations (bitwise-equal to the historical monolithic loop —
+    regression-pinned in tests/test_substrate_parity.py).
+    """
+    if B.ndim != 2:
+        raise ValueError(f"B must be (n, m); got shape {B.shape}")
+    sub = get_substrate(substrate)
+    bmv = matvec if blocked else sub.as_block_matvec(matvec)
+    bmv, B = wrap_block_preconditioned(sub, bmv, B, precond, matvec)
+    state = init_state(bmv, B, X0, config=config, r0_star=r0_star,
+                       dot_reduce=dot_reduce, substrate=sub, tol=tol)
+    state = step_chunk(bmv, state, config.maxiter, config=config,
+                       dot_reduce=dot_reduce, substrate=sub)
+    return result_from_state(state)

@@ -78,6 +78,27 @@ def identity_reduce(partials: jax.Array) -> jax.Array:
     return partials
 
 
+def per_column(value, m: int, dtype, *, name: str = "tol") -> jax.Array:
+    """Broadcast a per-solve setting to a per-column ``(m,)`` vector.
+
+    Heterogeneous multi-RHS solves (``repro.core.multirhs``, and the
+    continuous-batching engine in :mod:`repro.service` built on it) carry
+    ``tol`` / ``maxiter`` per column: a scalar (e.g. the
+    :class:`SolverConfig` default) broadcasts to all m columns, an ``(m,)``
+    vector is taken as-is, and anything else is a loud shape error — a
+    silently broadcast ``(k,)`` vector of the wrong length would assign
+    tolerances to the wrong requests.
+    """
+    arr = jnp.asarray(value, dtype=dtype)
+    if arr.ndim == 0:
+        return jnp.full((m,), arr, dtype=dtype)
+    if arr.shape != (m,):
+        raise ValueError(
+            f"per-column {name} must be a scalar or shape ({m},); "
+            f"got shape {arr.shape}")
+    return arr
+
+
 def history_init(cfg: SolverConfig, n_dtype) -> jax.Array:
     if cfg.record_history:
         return jnp.full((cfg.maxiter + 1,), jnp.nan, dtype=n_dtype)

@@ -23,8 +23,9 @@ Preconditioners (all pytrees; ``(n,)`` and ``(n, m)`` multi-RHS applies):
 object to build from.
 """
 from .base import (PRECONDITIONERS, Preconditioner, PrecondLike,
-                   preconditioned_matvec, preconditioned_system,
-                   resolve_precond, wrap_block_preconditioned)
+                   operator_fingerprint, preconditioned_matvec,
+                   preconditioned_system, resolve_precond,
+                   wrap_block_preconditioned)
 from .block_jacobi import BlockJacobiPreconditioner, block_jacobi
 from .jacobi import JacobiPreconditioner, jacobi
 from .polynomial import NeumannPreconditioner, neumann
@@ -34,6 +35,7 @@ __all__ = [
     "Preconditioner", "PrecondLike", "PRECONDITIONERS",
     "resolve_precond", "preconditioned_system",
     "wrap_block_preconditioned", "preconditioned_matvec",
+    "operator_fingerprint",
     "JacobiPreconditioner", "jacobi",
     "BlockJacobiPreconditioner", "block_jacobi",
     "NeumannPreconditioner", "neumann",

@@ -116,6 +116,46 @@ def resolve_precond(spec: PrecondLike, op) -> Optional[Preconditioner]:
                     f"got {type(spec).__name__}")
 
 
+def operator_fingerprint(op, precond: PrecondLike = None) -> str:
+    """Content hash identifying an operator (and optionally a precond spec).
+
+    Two operator objects with the same class, static aux data and array
+    contents hash identically — this is the cache key under which built
+    preconditioners and compiled solver programs are reused across
+    requests (:mod:`repro.service`): repeat traffic against the same A
+    must not rebuild block inverses or retrace the step program just
+    because the caller re-constructed the operator object.
+
+    ``precond`` folds a name spec or a built :class:`Preconditioner` into
+    the key (a built instance hashes by its own pytree contents, so two
+    differently-parameterized block-Jacobi instances never collide).
+    """
+    import hashlib
+
+    import numpy as np
+
+    h = hashlib.sha256()
+
+    def feed(obj, tag):
+        h.update(tag.encode())
+        leaves, treedef = jax.tree_util.tree_flatten(obj)
+        h.update(type(obj).__name__.encode())
+        h.update(repr(treedef).encode())
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+
+    feed(op, "op:")
+    if precond is not None:
+        if isinstance(precond, str):
+            h.update(f"precond-name:{precond}".encode())
+        else:
+            feed(precond, "precond:")
+    return h.hexdigest()
+
+
 def preconditioned_system(sub, op, b: jax.Array, precond: PrecondLike
                           ) -> Tuple[Callable, jax.Array]:
     """(matvec', b') of the left-preconditioned single-RHS system.

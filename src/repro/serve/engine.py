@@ -9,6 +9,16 @@ Padding unification: all slots share one (B, max_len) cache; per-slot
 lengths are tracked host-side and finished slots are masked.  This keeps
 exactly ONE compiled decode program regardless of request mix (no
 shape churn), which is the production property that matters.
+
+The solver service (:mod:`repro.service.engine`) is this engine's
+sibling and shares the same padding-unification/slot-refill idiom: a
+fixed slot block stepped by one compiled program, finished slots masked
+(there, per-column convergence masks inside the Krylov iteration;
+here, per-slot length masks), and freed slots refilled mid-flight by
+splicing fresh state into the resident batch (there, per-column Krylov
+state via ``multirhs.splice_columns``; here, prefill KV into the batch
+cache).  Improvements to either engine's scheduling usually translate
+to the other.
 """
 from __future__ import annotations
 

@@ -1,0 +1,38 @@
+"""repro.service — continuous-batching solve service.
+
+The serving layer for the paper's batched pipelined solver: independent
+user requests (one right-hand side each, with their own ``tol`` /
+``maxiter`` / ``deadline``) are multiplexed onto a fixed
+``(n, max_batch)`` resident block stepped by ONE compiled program per
+registered operator — one ``(9, m)`` reduction per iteration for the
+whole block, comm-hiding overlap intact under load.  Converged columns
+retire between chunks and freed slots are refilled mid-flight by
+splicing fresh Krylov state into the live block
+(:mod:`repro.core.multirhs`'s ``init_state / step_chunk /
+splice_columns`` open-loop API).
+
+Quickstart::
+
+    from repro.service import ServiceConfig, SolveEngine
+
+    eng = SolveEngine(ServiceConfig(max_batch=8, chunk=16))
+    name = eng.register(op, precond="block_jacobi")
+    rids = [eng.submit(name, b_i, tol=1e-8) for b_i in rhs_stream]
+    for res in eng.run():
+        print(res.rid, res.converged, res.iterations,
+              res.telemetry.queue_wait_s)
+
+See ``examples/serve_solver.py`` for a runnable tour and
+``benchmarks/bench_service.py`` for throughput/latency against
+sequential and static-batch serving.
+"""
+from .engine import SolveEngine
+from .registry import OperatorRegistry, RegisteredOperator
+from .types import (RequestResult, RequestTelemetry, ServiceConfig,
+                    SolveRequest)
+
+__all__ = [
+    "SolveEngine",
+    "OperatorRegistry", "RegisteredOperator",
+    "ServiceConfig", "SolveRequest", "RequestResult", "RequestTelemetry",
+]

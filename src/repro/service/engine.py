@@ -1,0 +1,283 @@
+"""Continuous-batching solve engine.
+
+Slot-based design, the solver-side sibling of the LM serving engine in
+:mod:`repro.serve.engine` (vLLM-style at the batch level): a fixed
+``(n, max_batch)`` block of right-hand-side *slots* is stepped in chunks
+of k iterations by ONE compiled program per registered operator,
+regardless of which request mix occupies the slots.  Padding
+unification: empty slots ride along as frozen columns (per-column budget
+0), so the step program's shapes never change and nothing recompiles
+under load.
+
+Between chunks the engine retires finished columns — converged, broken
+down, past their per-request ``maxiter`` budget (enforced on-device by
+the per-column mask), or past their wall-clock ``deadline`` — and
+refills the freed slots mid-flight by splicing fresh right-hand sides
+and reset per-column Krylov state into the live state pytree
+(:func:`repro.core.multirhs.splice_columns`).  Columns are independent
+in "individual" blocked mode, so multiplexing is *exact*: a request's
+trajectory is the one it would have had in a standalone
+``solve_batched`` call (property-tested in tests/test_service.py).
+
+What makes the batched p-BiCGSafe iteration the right substrate for a
+solver service is the paper's own production property: every iteration
+of the resident block issues ONE ``dot_reduce`` of a ``(9, m)`` partial
+block — the single synchronization phase, amortized over every resident
+request (Krasnopolsky, arXiv:1907.12874) — and that reduction keeps no
+dependency edge to the in-flight block matvec, so the comm-hiding
+overlap (Cools & Vanroose, arXiv:1612.01395) is intact under load
+(asserted on the engine's step program in tests/test_service.py).
+
+Throughput/latency against sequential and static-batch serving:
+``benchmarks/bench_service.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .registry import OperatorRegistry, RegisteredOperator
+from .types import (RequestResult, RequestTelemetry, ServiceConfig,
+                    SolveRequest)
+
+
+@dataclasses.dataclass
+class _Block:
+    """One operator's resident (n, max_batch) block + host slot table."""
+
+    state: dict
+    slots: List[Optional[SolveRequest]]
+    #: slots whose device column is still iterating but whose request was
+    #: retired host-side (deadline) — they must be freeze-spliced
+    orphans: set = dataclasses.field(default_factory=set)
+
+    def live(self) -> bool:
+        return any(s is not None for s in self.slots)
+
+
+class SolveEngine:
+    """Multiplex heterogeneous solve requests onto resident blocks.
+
+    One resident block per registered operator; :meth:`poll` services one
+    operator for one chunk (round-robin over operators with work) and
+    returns the requests that completed; :meth:`run` drains everything.
+
+    ``clock`` is injectable (tests and benchmarks drive deadlines with a
+    virtual clock); it must be monotonic seconds.
+    """
+
+    def __init__(self, scfg: ServiceConfig = ServiceConfig(),
+                 clock=time.monotonic):
+        self.scfg = scfg
+        self.registry = OperatorRegistry(scfg)
+        self._clock = clock
+        self._queues: Dict[str, Deque[SolveRequest]] = {}
+        self._blocks: Dict[str, Optional[_Block]] = {}
+        self._next_rid = 0
+        self._rr = 0                     # round-robin cursor
+        self._expired: List[RequestResult] = []
+
+    # -- registration / submission ---------------------------------------
+    def register(self, op, precond=None, name: Optional[str] = None) -> str:
+        """Register an operator (idempotent by content; see registry)."""
+        name = self.registry.register(op, precond, name)
+        canon = self.registry[name].name
+        self._queues.setdefault(canon, deque())
+        self._blocks.setdefault(canon, None)
+        return name
+
+    def submit(self, operator: str, b, *, tol: Optional[float] = None,
+               maxiter: Optional[int] = None,
+               deadline: Optional[float] = None) -> int:
+        """Enqueue one right-hand side; returns the request id."""
+        entry = self.registry[operator]
+        # host-side staging: the rhs is only ever consumed when the host
+        # assembles an admission block, so keeping it as np avoids a
+        # device put here AND a device pull per request at refill time
+        b = np.asarray(b, dtype=np.dtype(entry.dtype))
+        if b.shape != (entry.n,):
+            raise ValueError(
+                f"operator {operator!r} expects rhs of shape "
+                f"({entry.n},); got {b.shape}")
+        req = SolveRequest(operator=entry.name, b=b, tol=tol,
+                           maxiter=maxiter, deadline=deadline,
+                           rid=self._next_rid, t_submit=self._clock())
+        self._next_rid += 1
+        self._queues[entry.name].append(req)
+        return req.rid
+
+    # -- serving ---------------------------------------------------------
+    def has_work(self) -> bool:
+        return any(q for q in self._queues.values()) or \
+            any(b is not None and b.live() for b in self._blocks.values())
+
+    def run(self) -> List[RequestResult]:
+        """Drain all queues and blocks; completed requests in retirement
+        order."""
+        out: List[RequestResult] = []
+        while self.has_work():
+            out.extend(self.poll())
+        out.extend(self._take_expired())
+        return out
+
+    def poll(self) -> List[RequestResult]:
+        """Service ONE operator for one chunk; returns newly completed
+        requests (possibly none).  No-op when nothing has work."""
+        entries = self.registry.entries()
+        for off in range(len(entries)):
+            entry = entries[(self._rr + off) % len(entries)]
+            if self._entry_has_work(entry):
+                self._rr = (self._rr + off + 1) % len(entries)
+                done = self._service_chunk(entry)
+                return self._take_expired() + done
+        return self._take_expired()
+
+    # -- internals -------------------------------------------------------
+    def _entry_has_work(self, entry: RegisteredOperator) -> bool:
+        blk = self._blocks[entry.name]
+        return bool(self._queues[entry.name]) or \
+            (blk is not None and blk.live())
+
+    def _take_expired(self) -> List[RequestResult]:
+        out, self._expired = self._expired, []
+        return out
+
+    def _next_request(self, q: Deque[SolveRequest]
+                      ) -> Optional[SolveRequest]:
+        """Pop the next serviceable request; requests whose deadline
+        elapsed while queued are retired immediately (never occupy a
+        slot)."""
+        while q:
+            req = q.popleft()
+            if req.deadline is not None and \
+                    self._clock() - req.t_submit > req.deadline:
+                now = self._clock()
+                self._expired.append(RequestResult(
+                    rid=req.rid, operator=req.operator,
+                    x=np.zeros((req.b.shape[0],), req.b.dtype),
+                    iterations=0, relres=float("inf"),
+                    converged=False, breakdown=False,
+                    telemetry=RequestTelemetry(
+                        queue_wait_s=now - req.t_submit, service_s=0.0,
+                        wall_s=now - req.t_submit, chunks_resident=0,
+                        deadline_exceeded=True)))
+                continue
+            return req
+        return None
+
+    def _fill_vectors(self, entry, slot_iter, B, tolv, mitv, mask=None):
+        """Assign queued requests (then freeze-dummies) to the given free
+        slots, writing the rhs block and per-column tol/maxiter in place.
+        ``mask=None`` marks the initial fill (every slot is written);
+        otherwise only masked columns are spliced."""
+        q = self._queues[entry.name]
+        blk = self._blocks[entry.name]
+        for j in slot_iter:
+            req = self._next_request(q)
+            if req is not None:
+                req.t_start = self._clock()
+                B[:, j] = req.b
+                tolv[j] = self.scfg.tol if req.tol is None else req.tol
+                mitv[j] = self.scfg.maxiter if req.maxiter is None \
+                    else req.maxiter
+                blk.slots[j] = req
+                blk.orphans.discard(j)
+                if mask is not None:
+                    mask[j] = True
+            elif mask is not None and j in blk.orphans:
+                # no request for this slot: freeze-splice the orphan
+                # column (deadline-retired but still burning iterations)
+                B[:, j] = 1.0            # safe nonzero rhs, budget 0
+                mitv[j] = 0
+                mask[j] = True
+                blk.orphans.discard(j)
+            elif mask is None:
+                B[:, j] = 1.0            # initial fill: inert pad column
+                mitv[j] = 0
+
+    def _service_chunk(self, entry: RegisteredOperator
+                       ) -> List[RequestResult]:
+        name = entry.name
+        q = self._queues[name]
+        blk = self._blocks[name]
+        m = self.scfg.max_batch
+        np_dtype = np.dtype(entry.dtype)
+
+        # 1) admit + step, as ONE compiled program per chunk: either the
+        # plain chunk step, or the fused splice-then-step when freed
+        # slots are being refilled mid-flight (admission costs no extra
+        # dispatch or host round-trip)
+        if blk is None:
+            if not q:
+                return []
+            B = np.zeros((entry.n, m), np_dtype)
+            tolv = np.full((m,), self.scfg.tol, np.float64)
+            mitv = np.zeros((m,), np.int32)
+            blk = _Block(state=None, slots=[None] * m)
+            self._blocks[name] = blk
+            self._fill_vectors(entry, range(m), B, tolv, mitv)
+            blk.state = entry.step_fn(
+                entry.init_fn(jnp.asarray(B), jnp.asarray(tolv),
+                              jnp.asarray(mitv)))
+        else:
+            free = [j for j in range(m) if blk.slots[j] is None]
+            mask = np.zeros((m,), bool)
+            if free and (q or blk.orphans):
+                B = np.zeros((entry.n, m), np_dtype)
+                tolv = np.zeros((m,), np.float64)
+                mitv = np.zeros((m,), np.int32)
+                self._fill_vectors(entry, free, B, tolv, mitv, mask=mask)
+            if mask.any():
+                blk.state = entry.splice_step_fn(
+                    blk.state, jnp.asarray(mask), jnp.asarray(B),
+                    jnp.asarray(tolv), jnp.asarray(mitv))
+            else:
+                blk.state = entry.step_fn(blk.state)
+        for req in blk.slots:
+            if req is not None:
+                req.chunks_resident += 1
+
+        # 3) retire finished / deadline-blown columns (ONE host transfer
+        # for the five (m,) flag vectors)
+        st = blk.state
+        conv, brk, iters, relres, budget = jax.device_get(
+            (st["converged"], st["breakdown"], st["iterations"],
+             st["relres"], st["col_maxiter"]))
+        results: List[RequestResult] = []
+        x_host = None
+        now = self._clock()
+        for j, req in enumerate(blk.slots):
+            if req is None:
+                continue
+            finished = bool(conv[j] or brk[j] or iters[j] >= budget[j])
+            late = (req.deadline is not None
+                    and now - req.t_submit > req.deadline)
+            if not (finished or late):
+                continue
+            if x_host is None:
+                x_host = np.asarray(st["x"])
+            results.append(RequestResult(
+                rid=req.rid, operator=name, x=x_host[:, j].copy(),
+                iterations=int(iters[j]), relres=float(relres[j]),
+                converged=bool(conv[j]), breakdown=bool(brk[j]),
+                telemetry=RequestTelemetry(
+                    queue_wait_s=req.t_start - req.t_submit,
+                    service_s=now - req.t_start,
+                    wall_s=now - req.t_submit,
+                    chunks_resident=req.chunks_resident,
+                    deadline_exceeded=bool(late and not finished))))
+            blk.slots[j] = None
+            if late and not finished:
+                blk.orphans.add(j)       # still iterating: freeze later
+
+        # 4) drop a drained block (frozen orphans die with it)
+        if not blk.live() and not q:
+            self._blocks[name] = None
+
+        return results

@@ -1,0 +1,97 @@
+"""Request/response types and configuration for the solve service.
+
+A :class:`SolveRequest` is one right-hand side against one registered
+operator, with its own ``tol`` / ``maxiter`` / ``deadline``; the engine
+multiplexes heterogeneous requests onto one resident ``(n, max_batch)``
+block (see :mod:`repro.service.engine`) and returns a
+:class:`RequestResult` per request, carrying the same solver fields as a
+standalone :class:`repro.core.SolveResult` column plus serving telemetry
+(queue wait, chunks resident, wall time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Static engine configuration.
+
+    Attributes:
+      max_batch: slots in the resident block — the m of the one compiled
+        ``(n, m)`` step program.  Request mix never changes it (padding
+        unification: empty slots ride along frozen), so there is no shape
+        churn and no recompilation under load.
+      chunk: iterations per engine step.  Retirement/refill happens only
+        at chunk boundaries: larger chunks amortize host round-trips,
+        smaller chunks tighten refill latency.  The early-exit inside
+        :func:`repro.core.multirhs.step_chunk` means an almost-drained
+        block does not burn the full chunk.
+      substrate: compute substrate for the hot loop ("jnp" | "pallas" or
+        a :class:`repro.core.Substrate` instance) — see
+        :mod:`repro.core.substrate`.
+      tol / maxiter: per-request defaults when the request leaves them
+        unset (``maxiter`` is also the hard per-column budget the step
+        program enforces on device).
+    """
+
+    max_batch: int = 8
+    chunk: int = 32
+    substrate: Any = "jnp"
+    tol: float = 1e-8
+    maxiter: int = 10_000
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One right-hand side against a registered operator.
+
+    ``tol``/``maxiter`` default from :class:`ServiceConfig`; ``deadline``
+    is a wall-clock budget in seconds from submission — a request still
+    in flight past its deadline is retired unconverged at the next chunk
+    boundary (its partial iterate is returned).
+
+    ``b`` is staged host-side (np) by the engine: it is only consumed
+    when the host assembles an admission block, so device puts happen
+    once per block, not per request.
+    """
+
+    operator: str
+    b: np.ndarray
+    tol: Optional[float] = None
+    maxiter: Optional[int] = None
+    deadline: Optional[float] = None
+    rid: int = -1
+    # host-side bookkeeping (filled by the engine)
+    t_submit: float = 0.0
+    t_start: Optional[float] = None
+    chunks_resident: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestTelemetry:
+    """Serving telemetry for one completed request."""
+
+    queue_wait_s: float       # submit -> first resident in the block
+    service_s: float          # first resident -> retirement
+    wall_s: float             # submit -> retirement
+    chunks_resident: int      # engine chunks the request stayed resident
+    deadline_exceeded: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Per-request outcome: the solver fields a standalone
+    ``solve_batched`` column would report, plus telemetry."""
+
+    rid: int
+    operator: str
+    x: np.ndarray
+    iterations: int
+    relres: float
+    converged: bool
+    breakdown: bool
+    telemetry: RequestTelemetry

@@ -1,0 +1,65 @@
+"""Property-based tests (hypothesis) for the continuous-batching solve
+service: for ANY request stream — mixed tolerances/budgets/operators,
+any slot/chunk geometry, either substrate — every multiplexed request
+returns the same x / iterations / converged (to tolerance) as a
+standalone ``solve_batched`` call.  Streams are drawn longer than the
+slot count, so some requests always enter via mid-flight refill."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from conftest import enable_x64  # noqa: E402
+from repro.core import SolverConfig, solve_batched  # noqa: E402
+from repro.core import matrices as M  # noqa: E402
+from repro.service import ServiceConfig, SolveEngine  # noqa: E402
+
+SETTINGS = dict(max_examples=6, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**10),
+       n_req=st.integers(4, 9),
+       max_batch=st.sampled_from([2, 3, 4]),
+       chunk=st.sampled_from([3, 8, 64]),
+       substrate=st.sampled_from(["jnp", "jnp", "pallas"]))
+def test_engine_stream_matches_standalone(seed, n_req, max_batch, chunk,
+                                          substrate):
+    with enable_x64(True):
+        nx = 6 if substrate == "pallas" else 8   # interpret mode is slow
+        op1, _, _ = M.poisson3d(nx)
+        op2, _, _ = M.convection_diffusion(nx, peclet=1.0)
+        n = op1.n
+        eng = SolveEngine(ServiceConfig(max_batch=max_batch, chunk=chunk,
+                                        tol=1e-8, maxiter=300,
+                                        substrate=substrate))
+        eng.register(op1, name="a")
+        eng.register(op2, name="b")
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for _ in range(n_req):
+            opn = str(rng.choice(["a", "b"]))
+            bb = jnp.asarray(rng.standard_normal(n))
+            tol = float(rng.choice([1e-4, 1e-8]))
+            maxiter = int(rng.choice([9, 300]))
+            rid = eng.submit(opn, bb, tol=tol, maxiter=maxiter)
+            reqs.append((rid, opn, bb, tol, maxiter))
+        results = {r.rid: r for r in eng.run()}
+        assert len(results) == n_req
+        for rid, opn, bb, tol, maxiter in reqs:
+            op = op1 if opn == "a" else op2
+            ref = solve_batched(op, bb[:, None],
+                                config=SolverConfig(tol=tol,
+                                                    maxiter=maxiter),
+                                substrate=substrate)
+            r = results[rid]
+            assert r.converged == bool(ref.converged[0]), rid
+            assert abs(r.iterations - int(ref.iterations[0])) <= 1, rid
+            np.testing.assert_allclose(r.x, np.asarray(ref.x[:, 0]),
+                                       rtol=1e-6, atol=1e-8,
+                                       err_msg=f"rid {rid}")

@@ -431,6 +431,40 @@ def test_batched_pallas_block_ell_spmv(x64):
     assert err < 1e-7
 
 
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_batched_per_column_tol(x64, substrate):
+    """solve_batched accepts an (m,) tol vector: each column converges
+    against its OWN tolerance (what heterogeneous service requests need),
+    matching a standalone solve at that tolerance, on both substrates."""
+    op, b, _ = M.poisson3d(8)
+    B = _rhs_block(b, 3)
+    tols = jnp.asarray([1e-4, 1e-8, 1e-10])
+    cfg = SolverConfig(tol=1e-8, maxiter=2000)
+    res = solve_batched(op.matvec, B, config=cfg, substrate=substrate,
+                        tol=tols)
+    assert bool(np.asarray(res.converged).all())
+    relres = np.asarray(res.relres)
+    iters = np.asarray(res.iterations)
+    for j, tol in enumerate(np.asarray(tols)):
+        assert relres[j] <= tol, (j, relres[j], tol)
+        solo = solve_batched(op.matvec, B[:, j:j + 1],
+                             config=SolverConfig(tol=float(tol),
+                                                 maxiter=2000),
+                             substrate=substrate)
+        assert int(iters[j]) == int(solo.iterations[0]), (
+            f"column {j}: per-column tol changed the trajectory")
+    # looser columns stop earlier than tighter ones
+    assert iters[0] < iters[1] < iters[2]
+
+
+def test_batched_per_column_tol_shape_is_loud(x64):
+    """A wrong-length tol vector must not silently broadcast."""
+    op, b, _ = M.poisson3d(8)
+    with pytest.raises(ValueError, match="per-column tol"):
+        solve_batched(op.matvec, _rhs_block(b, 3),
+                      tol=jnp.asarray([1e-8, 1e-8]))
+
+
 def test_batched_history_and_x0(x64):
     op, b, _ = M.poisson3d(8)
     B = _rhs_block(b, 3)
@@ -475,6 +509,127 @@ def test_masked_normalizes_m1_degenerate_shapes(x64):
     # a real RHS axis must not silently broadcast one column to all m)
     with pytest.raises(ValueError, match="rank mismatch"):
         _masked(jnp.asarray([True, True]), jnp.ones(()), jnp.zeros((2,)))
+
+
+# ---------------------------------------------------------------------------
+# deprecation hygiene: the init_state/step_chunk refactor of solve_batched
+# (PR 4) must be BYTE-identical to the historical monolithic while_loop
+# ---------------------------------------------------------------------------
+
+def _solve_batched_pre_refactor(matvec, B, *, config):
+    """Verbatim copy of the pre-refactor ``solve_batched`` hot loop
+    (git 9a6cb8c): one closed ``lax.while_loop`` with a scalar global
+    iteration counter, closure-carried RS/norm_r0, and a scalar tol.
+    The refactored open-loop wrapper must reproduce it bit for bit."""
+    from repro.core._common import (bicgsafe_coefficients,
+                                    pipelined_recurrence_tail)
+    from repro.core.multirhs import _masked
+    from repro.core.substrate import get_substrate
+    from repro.core.types import SolveResult
+
+    sub = get_substrate("jnp")
+    bmv = sub.as_block_matvec(matvec)
+    n, m = B.shape
+    eps = config.breakdown_threshold(B.dtype)
+    X = jnp.zeros_like(B)
+    R0 = B
+    RS = R0
+    S0 = bmv(R0)
+    norm_r0 = jnp.sqrt(sub.dots([(R0, R0)]))[0]
+    Z0 = jnp.zeros_like(B)
+    ones_m = jnp.ones((m,), B.dtype)
+    if config.record_history:
+        hist = jnp.full((config.maxiter + 1, m), jnp.nan, norm_r0.dtype)
+    else:
+        hist = jnp.zeros((0, m), norm_r0.dtype)
+    state = dict(
+        x=X, r=R0, s=S0, p=Z0, u=Z0, t=Z0, y=Z0, z=Z0, w=Z0, l=Z0, g=Z0,
+        alpha=jnp.zeros((m,), B.dtype), zeta=ones_m, f=ones_m,
+        i=jnp.zeros((), jnp.int32),
+        iterations=jnp.zeros((m,), jnp.int32),
+        relres=jnp.ones((m,), norm_r0.dtype),
+        converged=jnp.zeros((m,), bool), breakdown=jnp.zeros((m,), bool),
+        hist=hist)
+
+    def cond(st):
+        active = (~st["converged"]) & (~st["breakdown"])
+        return jnp.any(active) & (st["i"] < config.maxiter)
+
+    def body(st):
+        r, s, y, t_prev = st["r"], st["s"], st["y"], st["t"]
+        active = (~st["converged"]) & (~st["breakdown"])
+        As = bmv(s)
+        dots = sub.bicgsafe_dots(s, y, r, t_prev, RS)
+        beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
+            dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)
+        relres = jnp.sqrt(jnp.abs(rr)) / norm_r0
+        done = relres <= config.tol
+        advance = active & ~done & ~bad
+        upd = sub.axpy_phase(
+            dict(r=r, p=st["p"], u=st["u"], t=t_prev, y=y, z=st["z"],
+                 s=s, l=st["l"], g=st["g"], w=st["w"], x=st["x"], As=As),
+            (alpha, beta, zeta, eta), mask=advance)
+        p, u, q, w, t = (upd[k] for k in ("p", "u", "q", "w", "t"))
+        z, y_next, x_next, r_next = (
+            upd[k] for k in ("z", "y", "x", "r"))
+        Aw = bmv(w)
+        l, g_next, s_next = pipelined_recurrence_tail(
+            q, s, As, st["g"], Aw, alpha, zeta, eta)
+        upd = lambda new, old: _masked(advance, new, old)  # noqa: E731
+        relres_out = _masked(active, relres, st["relres"])
+        if config.record_history:
+            hist_i = st["hist"].at[st["i"]].set(
+                jnp.where(active, relres_out.astype(st["hist"].dtype),
+                          st["hist"][st["i"]]))
+        else:
+            hist_i = st["hist"]
+        return dict(
+            x=x_next, r=r_next, s=upd(s_next, s),
+            p=p, u=u, t=t, y=y_next, z=z, w=w,
+            l=upd(l, st["l"]), g=upd(g_next, st["g"]),
+            alpha=upd(alpha, st["alpha"]), zeta=upd(zeta, st["zeta"]),
+            f=upd(f, st["f"]),
+            i=st["i"] + 1,
+            iterations=jnp.where(advance, st["i"] + 1, st["iterations"]),
+            relres=relres_out,
+            converged=st["converged"] | (active & done),
+            breakdown=st["breakdown"] | (active & bad & ~done),
+            hist=hist_i)
+
+    st = jax.lax.while_loop(cond, body, state)
+    return SolveResult(st["x"], st["iterations"], st["relres"],
+                       st["converged"], st["breakdown"], st["hist"])
+
+
+REGRESSION_PROBLEMS = {
+    "stencil7": lambda: M.poisson3d(8),                     # Stencil7
+    "dense": lambda: M.nonsym_dense(64),                    # Dense
+    "csr": lambda: M.random_nonsym(300, seed=2),            # CSR
+    "ell": lambda: M.random_nonsym(300, seed=2, fmt="ell"),  # ELL
+}
+
+
+@pytest.mark.parametrize("prob", list(REGRESSION_PROBLEMS))
+def test_solve_batched_bitwise_pre_refactor_regression(x64, prob):
+    """Fixed-seed before/after regression on all four operator classes:
+    the open-loop refactor (state-carried rs/norm_r0, per-column tol and
+    first-iteration logic) keeps ``solve_batched`` BYTE-identical to the
+    pre-refactor monolithic loop — every result field, including the
+    recorded residual history."""
+    op, b, _ = REGRESSION_PROBLEMS[prob]()
+    B = _rhs_block(b, 3, seed=11)
+    cfg = SolverConfig(tol=1e-8, maxiter=300, record_history=True)
+    old = _solve_batched_pre_refactor(op.matvec, B, config=cfg)
+    new = solve_batched(op.matvec, B, config=cfg)
+    assert bool(np.asarray(new.converged).all()), (
+        f"{prob}: regression baseline did not converge")
+    for field in ("x", "iterations", "relres", "converged", "breakdown",
+                  "residual_history"):
+        a = np.asarray(getattr(old, field))
+        c = np.asarray(getattr(new, field))
+        assert np.array_equal(a, c, equal_nan=True), (
+            f"{prob}: solve_batched.{field} changed bitwise after the "
+            "init_state/step_chunk refactor")
 
 
 def test_batched_m1_with_squeezing_dot_reduce(x64):

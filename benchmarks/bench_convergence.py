@@ -15,7 +15,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 
-from repro.core import SOLVERS, SolverConfig, as_matvec  # noqa: E402
+import repro  # noqa: E402
+from repro.core import SolverConfig  # noqa: E402
 from repro.core import matrices as M  # noqa: E402
 
 from .common import fmt_table, write_json  # noqa: E402
@@ -48,12 +49,13 @@ def run(quick: bool = False):
     histories = {}
     for pname, gen in problems.items():
         op, b, xt = gen()
-        mv = as_matvec(op)
         row = [pname, op.shape[0]]
         for mname in METHODS:
             cfg = SolverConfig(tol=1e-8, maxiter=10_000,
                                record_history=True)
-            res = SOLVERS[mname](mv, b, config=cfg)
+            # bound session per (method, operator) — the front door; a
+            # re-run against the same matrix would reuse the program
+            res = repro.make_solver(mname, op, config=cfg).solve(b)
             it = int(res.iterations) if bool(res.converged) else -1
             row.append(it if it >= 0 else "-")
             h = np.asarray(res.residual_history)

@@ -12,6 +12,8 @@
   bench_precond       preconditioning      (precond vs not, per solver)
   bench_service       solve service        (continuous batching vs
                                             sequential / static batch)
+  bench_api           bind-once sessions   (repeat-solve amortization vs
+                                            legacy free functions)
 
 Artifacts land in experiments/*.json; stdout is the human summary.
 """
@@ -31,11 +33,12 @@ def main() -> None:
                     help="comma-separated subset of bench names")
     args = ap.parse_args()
 
-    from . import (bench_convergence, bench_cost, bench_multirhs,
+    from . import (bench_api, bench_convergence, bench_cost, bench_multirhs,
                    bench_overlap, bench_precond, bench_roofline, bench_rr,
                    bench_scaling, bench_service)
 
     benches = {
+        "api": bench_api.run,
         "convergence": bench_convergence.run,
         "rr": bench_rr.run,
         "cost": bench_cost.run,

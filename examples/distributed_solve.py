@@ -19,9 +19,9 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import (SOLVERS, SolverConfig)  # noqa: E402
+import repro  # noqa: E402
+from repro.core import SolverConfig  # noqa: E402
 from repro.core import matrices as M  # noqa: E402
-from repro.core.distributed import distributed_stencil_solve  # noqa: E402
 
 
 def main():
@@ -38,8 +38,11 @@ def main():
     b_grid = b.reshape(n, n, n)
     for name in ("p-bicgsafe", "ssbicgsafe2", "bicgstab", "p-bicgstab"):
         t0 = time.perf_counter()
-        res = distributed_stencil_solve(SOLVERS[name], op, b_grid, mesh,
-                                        config=SolverConfig(tol=1e-8))
+        # bind-once front door: the mesh-bound session builds the
+        # shard_map program once; repeat solves would reuse it
+        dist = repro.make_solver(name, op,
+                                 config=SolverConfig(tol=1e-8)).on_mesh(mesh)
+        res = dist.solve(b_grid)
         jax.block_until_ready(res.x)
         dt = time.perf_counter() - t0
         err = float(jnp.linalg.norm(res.x.reshape(-1) - xt)

@@ -1,74 +1,43 @@
-"""Quickstart: the paper's solver in 30 lines + a tiny LM train step.
+"""Quickstart: the paper's solver behind one front door + a tiny LM step.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Choosing a substrate
---------------------
-Every solver takes ``substrate="jnp"`` (default) or ``substrate="pallas"``
-(:mod:`repro.core.substrate`), selecting who computes the hot-loop phases:
+The front door (``repro.api``)
+------------------------------
+Bind the operator ONCE, solve many times:
 
-* ``"jnp"`` issues the 9 inner products of the fused phase as 9 separate
-  reductions (18 operand streams from HBM) and the Alg. 3.1 update phase
-  as ~10 individual AXPYs — simple, and fine when the solve is small or
-  the matvec dominates.
-* ``"pallas"`` runs the hand-tiled kernels: the 9-dot phase reads each of
-  its 5 vectors from HBM exactly once, and the whole vector-update phase
-  is one pass (12 tile reads + 10 writes instead of ~30 reads + 10
-  writes).  Both phases are memory-bound (arith intensity ~0.6 flop/byte,
-  see kernels/fused_axpy.py), so at the ~819 GB/s HBM roofline the fused
-  update phase is worth ~2.5x of the solver's vector-update time — the
-  Pallas substrate wins whenever n is large enough that the solve is
-  HBM-bound, i.e. exactly the paper's regime.  On TPU these are compiled
-  Mosaic kernels; on CPU/GPU the same kernel bodies run in (slow)
-  interpret mode — use "pallas" off-TPU only to validate numerics, not
-  for speed.
+    solver = repro.make_solver("p-bicgsafe", op, precond="block_jacobi",
+                               substrate="pallas")
+    res = solver.solve(b)                 # traces + compiles once
+    res = solver.solve(b2)                # replays the compiled program
+    res = solver.solve_many([b3, b4])     # ONE (9, m) reduction/iter
+    dist = solver.on_mesh(mesh)           # sharded, same session
 
-Multi-RHS batching shifts the trade further: ``solve_batched`` streams
-``(n, m)`` blocks, so each HBM pass and the single ``(9, m)`` reduction
-are amortized over m right-hand sides — reduction latency per system
-drops ~m-fold (the Krasnopolsky multi-RHS regime; see
-benchmarks/bench_multirhs.py).
+or one-shot: ``repro.solve(op, b)`` (which still hits the content-keyed
+session cache, so a second call against an equal-content operator reuses
+the compiled program and the built preconditioner).
 
-Every scenario x substrate combination runs the same kernel bodies:
+Everything is set at bind time and never re-threaded per call:
 
-* ``solve_batched(..., substrate="pallas")`` runs the whole hot loop on
-  the (n, m) block kernels — ``fused_dots_batched`` (one (9, m) partial
-  block per HBM pass), ``fused_axpy_batched`` (the 10-update phase with
-  the per-column convergence mask applied in-kernel, so finished columns
-  freeze without a second masking pass), and the block-ELL SpMV for
-  banded ``ELLOperator``s (matrix tiles read once for all m columns).
-* ``distributed_stencil_solve_batched(op, B_grid, mesh)`` shards the
-  (n, m) block by rows over any mesh (``repro.launch.mesh`` —
-  ``make_multirhs_mesh()`` gives the flat row ring) while columns stay
-  local: per iteration there is still exactly ONE psum — now carrying the
-  (9, m) block — and it keeps no dependency edge to the in-flight block
-  matvec, so the paper's communication hiding survives batching+sharding
-  (proven structurally in benchmarks/bench_overlap.py).
+* ``method``  — any of ``repro.SOLVERS``: "bicgstab", "p-bicgstab",
+  "gpbicg", "cgs", "ssbicgsafe2", "p-bicgsafe" (the paper's Alg. 3.1),
+  "p-bicgsafe-rr" (Alg. 4.1).
+* ``substrate`` — ``"jnp"`` (reference; 9 separate reductions for the
+  fused phase) or ``"pallas"`` (hand-tiled kernels: one HBM pass for
+  the 9-dot phase, one for the whole vector-update phase, block-ELL
+  SpMV; compiled Mosaic on TPU, interpret mode elsewhere — use off-TPU
+  to validate numerics, not for speed).
+* ``precond`` — ``"jacobi" | "block_jacobi" | "neumann" | "ssor"`` or a
+  Preconditioner instance; built ONCE at bind time, applied inside the
+  overlap window (the single reduction per iteration keeps no
+  dependency edge to the in-flight M^{-1}-applied matvec, on every
+  binding — asserted at the jaxpr level in the test suite).
 
-Preconditioning
----------------
-Every solver (and both batched/distributed drivers) also takes
-``precond=`` — ``"jacobi"``, ``"block_jacobi"``, ``"neumann"``, ``"ssor"``
-or a :class:`repro.precond.Preconditioner` instance — and solves the
-left-preconditioned system M^{-1} A x = M^{-1} b.  Which preconditioners
-are substrate-kernel-backed and which are shard-local:
-
-* ``block_jacobi`` — Pallas batched block-apply kernel on
-  ``substrate="pallas"`` (shared-block stencil case: one MXU matmul);
-  *exactly* shard-local in the distributed driver (z-line blocks never
-  cross x-slab shards).
-* ``neumann``      — rides the substrate's SpMV kernels (banded ELL ->
-  Pallas block-ELL); shard-local additive-Schwarz flavor when
-  distributed.
-* ``jacobi``       — elementwise (XLA-fused, no kernel needed); exactly
-  shard-local.
-* ``ssor``         — stencil shifts (jnp body on either substrate);
-  shard-local additive-Schwarz flavor when distributed.
-
-The M^{-1}-applies are scheduled inside the pipelined solvers' overlap
-window: one reduction per iteration, no dependency edge to the in-flight
-precond+matvec, on every path (see repro/core/_common.py for the full
-support matrix, and repro/precond for the subsystem).
+The historical free functions (``pbicgsafe_solve``, ``solve_batched``,
+``distributed_stencil_solve*``) keep working verbatim but are deprecated
+shims now: they re-trace the whole solver on every call, which is
+exactly the cost the session amortizes (benchmarks/bench_api.py measures
+~10x on 10 repeat solves — larger the more you repeat).
 """
 import jax
 
@@ -76,44 +45,47 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import (SolverConfig, bicgstab_solve, pbicgsafe_solve,  # noqa: E402
-                        solve_batched, ssbicgsafe2_solve)
+import repro  # noqa: E402
+from repro.core import SolverConfig  # noqa: E402
 from repro.core import matrices as M  # noqa: E402
 
 
 def solver_demo():
     print("== p-BiCGSafe vs baselines on a convection-diffusion system ==")
     op, b, x_true = M.convection_diffusion(24, peclet=1.0)  # 13824 rows
-    for name, solve in (("BiCGStab", bicgstab_solve),
-                        ("ssBiCGSafe2", ssbicgsafe2_solve),
-                        ("p-BiCGSafe", pbicgsafe_solve)):
-        res = solve(op.matvec, b, config=SolverConfig(tol=1e-8))
+    for method in ("bicgstab", "ssbicgsafe2", "p-bicgsafe"):
+        solver = repro.make_solver(method, op,
+                                   config=SolverConfig(tol=1e-8))
+        res = solver.solve(b)
         err = float(jnp.linalg.norm(res.x - x_true)
                     / jnp.linalg.norm(x_true))
-        print(f"  {name:12s} iterations={int(res.iterations):4d} "
+        print(f"  {method:12s} iterations={int(res.iterations):4d} "
               f"relres={float(res.relres):.2e} x_err={err:.2e}")
+    # repeat solves against the bound operator replay the compiled
+    # program — no retracing (solver.stats counts traces)
+    solver.solve(2.0 * b)
+    print(f"  repeat solve reused the program: {solver.stats}")
 
 
 def precond_demo():
-    print("\n== preconditioned p-BiCGSafe (repro.precond) ==")
-    from repro.precond import block_jacobi
+    print("\n== preconditioned p-BiCGSafe (precond= at bind time) ==")
     # hard_nonsym: badly row-scaled — plain p-BiCGSafe stagnates, the
     # preconditioned solve converges in a few dozen iterations with the
     # M^{-1}-apply hidden inside the overlap window.
     op, b, x_true = M.hard_nonsym(n=600)
     cfg = SolverConfig(tol=1e-8, maxiter=3000)
-    plain = pbicgsafe_solve(op, b, config=cfg)
-    prec = pbicgsafe_solve(op, b, config=cfg, precond=block_jacobi(op),
-                           substrate="pallas")
+    plain = repro.solve(op, b, config=cfg)
+    prec = repro.make_solver("p-bicgsafe", op, precond="block_jacobi",
+                             substrate="pallas", config=cfg).solve(b)
     err = float(jnp.linalg.norm(prec.x - x_true) / jnp.linalg.norm(x_true))
     print(f"  unpreconditioned: converged={bool(plain.converged)} "
           f"iterations={int(plain.iterations)}")
     print(f"  block-Jacobi (pallas apply): converged={bool(prec.converged)} "
           f"iterations={int(prec.iterations)} x_err={err:.2e}")
-    # SSOR on the stencil family: same entry point, name spec
+    # SSOR on the stencil family: same front door, name spec
     op, b, _ = M.anisotropic3d(10, eps=1e-2)
-    plain = pbicgsafe_solve(op, b, config=cfg)
-    prec = pbicgsafe_solve(op, b, config=cfg, precond="ssor")
+    plain = repro.solve(op, b, config=cfg)
+    prec = repro.solve(op, b, precond="ssor", config=cfg)
     print(f"  anisotropic3d: {int(plain.iterations)} iters -> "
           f"{int(prec.iterations)} with precond='ssor'")
 
@@ -122,10 +94,11 @@ def multirhs_demo():
     print("\n== batched multi-RHS p-BiCGSafe (one (9, m) reduction/iter) ==")
     op, b, _ = M.poisson3d(10)
     keys = jax.random.split(jax.random.PRNGKey(0), 3)
-    B = jnp.stack([b] + [jax.random.normal(k, b.shape, b.dtype)
-                         for k in keys], axis=1)         # (n, 4)
-    res = solve_batched(op.matvec, B, config=SolverConfig(tol=1e-8))
-    for j in range(B.shape[1]):
+    cols = [b] + [jax.random.normal(k, b.shape, b.dtype) for k in keys]
+    solver = repro.make_solver("p-bicgsafe", op,
+                               config=SolverConfig(tol=1e-8))
+    res = solver.solve_many(cols)            # per-column vectors accepted
+    for j in range(len(cols)):
         print(f"  rhs {j}: iterations={int(res.iterations[j]):4d} "
               f"relres={float(res.relres[j]):.2e} "
               f"converged={bool(res.converged[j])}")
@@ -133,13 +106,18 @@ def multirhs_demo():
     # interpret mode elsewhere) — same trajectory column by column; the
     # stopping iteration may flip by one where relres hovers at tol (the
     # kernel accumulates block-wise, jnp pairwise)
-    res_k = solve_batched(op.matvec, B, config=SolverConfig(tol=1e-8),
-                          substrate="pallas")
+    res_k = repro.make_solver("p-bicgsafe", op, substrate="pallas",
+                              config=SolverConfig(tol=1e-8)).solve_many(cols)
     same = [abs(int(res_k.iterations[j]) - int(res.iterations[j])) <= 1
-            for j in range(B.shape[1])]
+            for j in range(len(cols))]
     print(f"  substrate='pallas' block kernels: converged="
           f"{bool(res_k.converged.all())}, per-column iteration "
           f"counts within +-1 of jnp: {all(same)}")
+    # heterogeneous tolerances are per-column runtime arguments — one
+    # compiled program serves every mix (what repro.service rides on)
+    het = solver.solve_many(cols[:3], tol=jnp.asarray([1e-4, 1e-8, 1e-10]))
+    print(f"  per-column tol [1e-4, 1e-8, 1e-10]: iterations="
+          f"{[int(i) for i in het.iterations]}")
 
 
 def lm_demo():

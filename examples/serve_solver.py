@@ -2,9 +2,9 @@
 
   PYTHONPATH=src python examples/serve_solver.py
 
-The library-call way to solve ``A x = b`` is one ``pbicgsafe_solve`` /
-``solve_batched`` call per right-hand side.  A service multiplexes
-instead: :class:`repro.service.SolveEngine` keeps one resident
+The library-call way to solve ``A x = b`` is a bound session
+(``repro.make_solver(...).solve(b)``) per right-hand side.  A service
+multiplexes instead: :class:`repro.service.SolveEngine` keeps one resident
 ``(n, max_batch)`` block per registered operator, steps ALL resident
 requests with ONE compiled program (one (9, m) fused reduction per
 iteration — the paper's single synchronization phase, amortized over
@@ -16,7 +16,10 @@ block-Jacobi-preconditioned convection-diffusion stencil), enqueues a
 mixed stream of requests with heterogeneous tolerances and budgets
 against both, drains the engine, and prints per-request telemetry.
 Re-registering an operator with the same content is a fingerprint cache
-hit: the built preconditioner and the compiled step programs are reused.
+hit: the engine's registry consumes the :mod:`repro.api` session cache,
+so the built preconditioner and the compiled step programs are reused —
+even across engines, or with a direct ``repro.make_solver`` of the same
+operator.
 """
 import numpy as np
 

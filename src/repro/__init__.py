@@ -1,0 +1,42 @@
+"""repro — communication-hiding pipelined BiCGSafe, grown production-shaped.
+
+Front door (:mod:`repro.api`): bind an operator once, solve many times —
+
+    import repro
+
+    solver = repro.make_solver("p-bicgsafe", op, precond="block_jacobi",
+                               substrate="pallas")
+    res = solver.solve(b)                  # compiled program cached
+    res = solver.solve_many([b1, b2, b3])  # ONE (9, m) reduction/iter
+    dist = solver.on_mesh(mesh)            # sharded, same session
+
+    res = repro.solve(op, b)               # one-shot convenience
+
+Sessions are content-addressed: equal-content operators share one
+session (built preconditioner + compiled programs), whether they arrive
+via :func:`make_solver`, :func:`solve`, or the continuous-batching
+solve service (:mod:`repro.service`), whose registry consumes the same
+cache.
+
+Layers underneath: :mod:`repro.core` (the paper's solvers, operators,
+batched/distributed drivers), :mod:`repro.kernels` (Pallas hot-loop
+kernels), :mod:`repro.precond` (preconditioners inside the overlap
+window), :mod:`repro.service` (continuous batching).  The historical
+free-function entry points keep working as deprecated shims.
+"""
+from repro.api import (DistributedSolver, LinearSolver, make_solver,
+                       operator_fingerprint, solve)
+from repro.core import (SOLVERS, CSROperator, DenseOperator, ELLOperator,
+                        Preconditioner, SolveResult, SolverConfig,
+                        Stencil7Operator, SUBSTRATES, get_substrate)
+
+__all__ = [
+    # the front door
+    "make_solver", "solve", "LinearSolver", "DistributedSolver",
+    "operator_fingerprint",
+    # the vocabulary types the front door speaks
+    "SolverConfig", "SolveResult", "SOLVERS",
+    "DenseOperator", "CSROperator", "ELLOperator", "Stencil7Operator",
+    "Preconditioner",
+    "SUBSTRATES", "get_substrate",
+]

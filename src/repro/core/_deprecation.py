@@ -1,0 +1,55 @@
+"""Once-per-process deprecation plumbing for the legacy entry points.
+
+PR 5 made :mod:`repro.api` the front door: bind an operator once with
+:func:`repro.make_solver` and solve many times.  The historical free
+functions (``*_solve``, ``solve_batched``, the distributed drivers) keep
+working verbatim as thin shims, but each one announces its replacement
+with a single :class:`DeprecationWarning` per process — not per call, so
+a hot loop over a legacy entry point does not drown the user in
+warnings, and not silently, so the migration path is discoverable.
+
+The session layer itself delegates to the same underlying functions;
+those internal calls are wrapped in :func:`internal_use` so that code
+that has already migrated never sees a warning.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+_warned: set = set()
+_suppress_depth = 0
+
+
+def warn_legacy(name: str, replacement: str) -> None:
+    """Emit one DeprecationWarning per process for the named entry point.
+
+    Silent when called (transitively) from the session layer — a user on
+    the new API must never be warned about machinery they did not call.
+    """
+    if _suppress_depth or name in _warned:
+        return
+    _warned.add(name)
+    warnings.warn(
+        f"{name} is deprecated as a direct entry point; bind the operator "
+        f"once with {replacement} and reuse the session (compiled programs "
+        "and built preconditioners are cached per operator content). "
+        "The legacy call keeps working verbatim.",
+        DeprecationWarning, stacklevel=3)
+
+
+@contextlib.contextmanager
+def internal_use():
+    """Suppress legacy-entry warnings for delegating (already-migrated)
+    callers — the session layer and the drivers it builds on."""
+    global _suppress_depth
+    _suppress_depth += 1
+    try:
+        yield
+    finally:
+        _suppress_depth -= 1
+
+
+def reset_for_testing() -> None:
+    """Forget which warnings fired (tests assert once-per-process)."""
+    _warned.clear()

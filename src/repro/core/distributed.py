@@ -34,7 +34,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..precond.base import PrecondLike, resolve_precond
-from . import compat
+from . import _deprecation, compat
 from .linear_operator import Stencil7Operator
 from .types import SolveResult, SolverConfig
 
@@ -140,6 +140,57 @@ def halo_stencil_matvec(c: jax.Array, u_flat: jax.Array,
 # distributed solve driver
 # ---------------------------------------------------------------------------
 
+def build_stencil_solver(solver: Callable,
+                         op: Stencil7Operator,
+                         mesh: Mesh,
+                         *,
+                         shard_axes: Optional[Sequence[str]] = None,
+                         config: SolverConfig = SolverConfig(),
+                         substrate: str = "jnp",
+                         precond: PrecondLike = None,
+                         jit: bool = True) -> Callable:
+    """Build the sharded solve program ``fn(b_grid) -> SolveResult``.
+
+    This is the reusable half of :func:`distributed_stencil_solve`: the
+    shard-local preconditioner is resolved and the shard_map program is
+    constructed ONCE; the returned (jitted) callable is what a bound
+    session (:meth:`repro.api.LinearSolver.on_mesh`) caches so repeat
+    sharded solves stop paying per-call retracing.
+    """
+    axes = tuple(shard_axes if shard_axes is not None else mesh.axis_names)
+    sizes = _axis_sizes(mesh, axes)
+    n_shards = int(np.prod(sizes))
+    nx, ny, nz = op.nx, op.ny, op.nz
+    if nx % n_shards:
+        raise ValueError(f"nx={nx} not divisible by {n_shards} shards")
+    local_shape = (nx // n_shards, ny, nz)
+    c = op.c
+    pc = _shard_local_precond(precond, c, local_shape)
+
+    def dot_reduce(partials):
+        return lax.psum(partials, axes)   # ONE reduction for all dots
+
+    def shard_fn(b_local):
+        mv = functools.partial(halo_stencil_matvec, c,
+                               local_shape=local_shape, axes=axes, sizes=sizes)
+        with _deprecation.internal_use():
+            res = solver(mv, b_local.reshape(-1), config=config,
+                         dot_reduce=dot_reduce, substrate=substrate,
+                         precond=pc)
+        return res._replace(x=res.x.reshape(local_shape))
+
+    in_specs = P(axes)
+    out_specs = SolveResult(
+        x=P(axes), iterations=P(), relres=P(), converged=P(),
+        breakdown=P(), residual_history=P())
+
+    fn = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
+                          out_specs=out_specs, check_vma=False)
+    if jit:
+        fn = jax.jit(fn)
+    return fn
+
+
 def distributed_stencil_solve(solver: Callable,
                               op: Stencil7Operator,
                               b_grid: jax.Array,
@@ -165,7 +216,36 @@ def distributed_stencil_solve(solver: Callable,
     (:func:`_shard_local_precond`), so every preconditioner apply is
     shard-local — zero extra communication and an unchanged single psum
     per reduction phase.
+
+    Deprecated as a direct entry point: this shim rebuilds (and
+    retraces) the shard_map program on every call.  A mesh-bound session
+    — ``repro.make_solver(method, op).on_mesh(mesh)`` — builds it once
+    and reuses the compiled program.
     """
+    _deprecation.warn_legacy(
+        "distributed_stencil_solve",
+        "repro.make_solver(method, op).on_mesh(mesh)")
+    return build_stencil_solver(
+        solver, op, mesh, shard_axes=shard_axes, config=config,
+        substrate=substrate, precond=precond, jit=jit)(b_grid)
+
+
+def build_stencil_solver_batched(op: Stencil7Operator,
+                                 mesh: Mesh,
+                                 *,
+                                 shard_axes: Optional[Sequence[str]] = None,
+                                 config: SolverConfig = SolverConfig(),
+                                 substrate: str = "jnp",
+                                 precond: PrecondLike = None,
+                                 jit: bool = True) -> Callable:
+    """Build the sharded batched solve program ``fn(B_grid) -> SolveResult``.
+
+    The reusable half of :func:`distributed_stencil_solve_batched` (see
+    :func:`build_stencil_solver`); the returned callable accepts any
+    column count m — ``jax.jit`` keys the compiled program by shape.
+    """
+    from .multirhs import solve_batched
+
     axes = tuple(shard_axes if shard_axes is not None else mesh.axis_names)
     sizes = _axis_sizes(mesh, axes)
     n_shards = int(np.prod(sizes))
@@ -173,29 +253,46 @@ def distributed_stencil_solve(solver: Callable,
     if nx % n_shards:
         raise ValueError(f"nx={nx} not divisible by {n_shards} shards")
     local_shape = (nx // n_shards, ny, nz)
+    n_local = local_shape[0] * ny * nz
     c = op.c
+    # shard-local preconditioner (shape-polymorphic apply: the same bound
+    # M^{-1} serves the (n_local, m) block — one build for all m columns)
     pc = _shard_local_precond(precond, c, local_shape)
 
     def dot_reduce(partials):
-        return lax.psum(partials, axes)   # ONE reduction for all dots
+        return lax.psum(partials, axes)   # ONE reduction: the (9, m) block
 
     def shard_fn(b_local):
+        m = b_local.shape[-1]
         mv = functools.partial(halo_stencil_matvec, c,
                                local_shape=local_shape, axes=axes, sizes=sizes)
-        res = solver(mv, b_local.reshape(-1), config=config,
-                     dot_reduce=dot_reduce, substrate=substrate, precond=pc)
-        return res._replace(x=res.x.reshape(local_shape))
+        # NOTE: no r0_star passthrough — a global shadow vector would have
+        # to be row-sharded alongside B for the per-shard partial dots to
+        # be correct; the default (RS = R0, already local) is what the
+        # single-RHS driver uses too.
+        with _deprecation.internal_use():
+            res = solve_batched(mv, b_local.reshape(n_local, m),
+                                config=config, dot_reduce=dot_reduce,
+                                substrate=substrate, blocked=True, precond=pc)
+        return res._replace(x=res.x.reshape(*local_shape, m))
 
     in_specs = P(axes)
     out_specs = SolveResult(
         x=P(axes), iterations=P(), relres=P(), converged=P(),
         breakdown=P(), residual_history=P())
 
-    fn = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
-                          out_specs=out_specs, check_vma=False)
+    sharded = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
+                               out_specs=out_specs, check_vma=False)
+
+    def fn(B_grid):
+        if B_grid.ndim != 4:
+            raise ValueError(
+                f"B_grid must be (nx, ny, nz, m); got {B_grid.shape}")
+        return sharded(B_grid)
+
     if jit:
         fn = jax.jit(fn)
-    return fn(b_grid)
+    return fn
 
 
 def distributed_stencil_solve_batched(op: Stencil7Operator,
@@ -226,50 +323,19 @@ def distributed_stencil_solve_batched(op: Stencil7Operator,
     Returns a :class:`SolveResult` whose ``x`` is the sharded
     (nx, ny, nz, m) solution grid; per-column ``iterations``/``relres``/
     ``converged``/``breakdown`` are replicated.
-    """
-    from .multirhs import solve_batched
 
-    axes = tuple(shard_axes if shard_axes is not None else mesh.axis_names)
-    sizes = _axis_sizes(mesh, axes)
-    n_shards = int(np.prod(sizes))
-    nx, ny, nz = op.nx, op.ny, op.nz
+    Deprecated as a direct entry point (rebuilds the shard_map program
+    per call): use ``repro.make_solver("p-bicgsafe", op).on_mesh(mesh)
+    .solve_many(B_grid)``, which caches the built program.
+    """
+    _deprecation.warn_legacy(
+        "distributed_stencil_solve_batched",
+        'repro.make_solver("p-bicgsafe", op).on_mesh(mesh).solve_many(B)')
     if B_grid.ndim != 4:
         raise ValueError(f"B_grid must be (nx, ny, nz, m); got {B_grid.shape}")
-    m = B_grid.shape[-1]
-    if nx % n_shards:
-        raise ValueError(f"nx={nx} not divisible by {n_shards} shards")
-    local_shape = (nx // n_shards, ny, nz)
-    n_local = local_shape[0] * ny * nz
-    c = op.c
-    # shard-local preconditioner (shape-polymorphic apply: the same bound
-    # M^{-1} serves the (n_local, m) block — one build for all m columns)
-    pc = _shard_local_precond(precond, c, local_shape)
-
-    def dot_reduce(partials):
-        return lax.psum(partials, axes)   # ONE reduction: the (9, m) block
-
-    def shard_fn(b_local):
-        mv = functools.partial(halo_stencil_matvec, c,
-                               local_shape=local_shape, axes=axes, sizes=sizes)
-        # NOTE: no r0_star passthrough — a global shadow vector would have
-        # to be row-sharded alongside B for the per-shard partial dots to
-        # be correct; the default (RS = R0, already local) is what the
-        # single-RHS driver uses too.
-        res = solve_batched(mv, b_local.reshape(n_local, m), config=config,
-                            dot_reduce=dot_reduce,
-                            substrate=substrate, blocked=True, precond=pc)
-        return res._replace(x=res.x.reshape(*local_shape, m))
-
-    in_specs = P(axes)
-    out_specs = SolveResult(
-        x=P(axes), iterations=P(), relres=P(), converged=P(),
-        breakdown=P(), residual_history=P())
-
-    fn = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
-                          out_specs=out_specs, check_vma=False)
-    if jit:
-        fn = jax.jit(fn)
-    return fn(B_grid)
+    return build_stencil_solver_batched(
+        op, mesh, shard_axes=shard_axes, config=config, substrate=substrate,
+        precond=precond, jit=jit)(B_grid)
 
 
 def replicated_dot_reduce(axes):

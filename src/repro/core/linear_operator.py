@@ -250,9 +250,26 @@ def as_matvec(op) -> MatVec:
 # The preconditioning machinery moved to the repro.precond subsystem
 # (PR 3): JacobiPreconditioner gained a dtype-preserving zero-diagonal
 # guard + (n, m) multi-RHS applies there, and preconditioned_matvec is
-# superseded by the solvers' precond= parameter (which keeps operator
-# dispatch to the Pallas kernels and routes the M^{-1}-apply through the
-# compute substrate).  These aliases keep the historical import path
-# working; new code should import from repro.precond.
-from repro.precond.base import preconditioned_matvec  # noqa: E402,F401
-from repro.precond.jacobi import JacobiPreconditioner  # noqa: E402,F401
+# superseded by precond= on a bound session (repro.make_solver), which
+# keeps operator dispatch to the Pallas kernels and routes the
+# M^{-1}-apply through the compute substrate.  PEP 562 module
+# __getattr__ keeps the historical import path working but announces the
+# move with one DeprecationWarning per process instead of aliasing
+# silently (identity is preserved: the returned objects ARE the
+# repro.precond ones).
+
+def __getattr__(name: str):
+    from ._deprecation import warn_legacy
+    if name == "preconditioned_matvec":
+        warn_legacy("repro.core.linear_operator.preconditioned_matvec",
+                    'precond= on repro.make_solver(...) '
+                    "(or repro.precond.preconditioned_matvec)")
+        from repro.precond.base import preconditioned_matvec
+        return preconditioned_matvec
+    if name == "JacobiPreconditioner":
+        warn_legacy("repro.core.linear_operator.JacobiPreconditioner",
+                    "repro.precond.JacobiPreconditioner")
+        from repro.precond.jacobi import JacobiPreconditioner
+        return JacobiPreconditioner
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

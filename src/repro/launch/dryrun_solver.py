@@ -26,7 +26,7 @@ jax.config.update("jax_enable_x64", True)   # paper protocol: fp64 vectors
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import SOLVERS, SolverConfig  # noqa: E402
-from repro.core.distributed import distributed_stencil_solve  # noqa: E402
+from repro.core.distributed import build_stencil_solver  # noqa: E402
 from repro.core.linear_operator import Stencil7Operator  # noqa: E402
 from repro.launch.flops import count_fn  # noqa: E402
 from repro.launch.hlo_analysis import collective_stats  # noqa: E402
@@ -56,10 +56,8 @@ def run_cell(solver_name: str, multi_pod: bool, outdir: Path,
         cfg = SolverConfig(tol=1e-8, maxiter=maxiter)
         solver = SOLVERS[solver_name]
 
-        def solve(b):
-            return distributed_stencil_solve(solver, op, b, mesh,
-                                             config=cfg, jit=False)
-
+        solve = build_stencil_solver(solver, op, mesh, config=cfg,
+                                     jit=False)
         fn = jax.jit(solve)
         lowered = fn.lower(b_sds)
         t_lower = time.time() - t0

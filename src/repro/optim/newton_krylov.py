@@ -23,7 +23,10 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.core import SolverConfig, pbicgsafe_solve
+from repro.core import SolverConfig
+# the unwrapped implementation (not the deprecated free-function shim):
+# the inner Krylov solve is library-internal delegation, not user API
+from repro.core.pipelined_bicgsafe import pbicgsafe_solve
 from repro.core.types import identity_reduce
 
 

@@ -90,6 +90,32 @@ PRECONDITIONERS = ("jacobi", "block_jacobi", "neumann", "ssor")
 PrecondLike = Union[None, str, Preconditioner]
 
 
+def validate_precond_spec(spec: PrecondLike, op) -> None:
+    """Validate a precond spec without building it (cheap, eager).
+
+    The bind-once session layer validates at bind time but builds
+    lazily (a mesh-bound session rebuilds shard-locally and never needs
+    the global build); the checks and messages here are the single
+    source of truth for both paths.
+    """
+    if spec is None or isinstance(spec, Preconditioner):
+        return
+    if isinstance(spec, str):
+        if spec not in PRECONDITIONERS:
+            raise ValueError(
+                f"unknown preconditioner {spec!r}; expected one of "
+                f"{sorted(PRECONDITIONERS)} or a Preconditioner instance")
+        if not hasattr(op, "diagonal"):
+            raise TypeError(
+                f"precond={spec!r} must be built from an operator object "
+                "with .diagonal(); got a bare matvec callable — pass the "
+                "operator itself, or construct the preconditioner "
+                "explicitly (repro.precond.jacobi(op) etc.)")
+        return
+    raise TypeError(f"precond must be None, a name, or a Preconditioner; "
+                    f"got {type(spec).__name__}")
+
+
 def resolve_precond(spec: PrecondLike, op) -> Optional[Preconditioner]:
     """Resolve a precond spec: None / instance / registry name.
 
@@ -97,63 +123,23 @@ def resolve_precond(spec: PrecondLike, op) -> Optional[Preconditioner]:
     (``diagonal()`` etc.) — a bare matvec callable cannot seed a
     preconditioner and raises a TypeError naming the fix.
     """
+    validate_precond_spec(spec, op)
     if spec is None or isinstance(spec, Preconditioner):
         return spec
-    if isinstance(spec, str):
-        factories = _factories()
-        if spec not in factories:
-            raise ValueError(
-                f"unknown preconditioner {spec!r}; expected one of "
-                f"{sorted(factories)} or a Preconditioner instance")
-        if not hasattr(op, "diagonal"):
-            raise TypeError(
-                f"precond={spec!r} must be built from an operator object "
-                "with .diagonal(); got a bare matvec callable — pass the "
-                "operator itself, or construct the preconditioner "
-                "explicitly (repro.precond.jacobi(op) etc.)")
-        return factories[spec](op)
-    raise TypeError(f"precond must be None, a name, or a Preconditioner; "
-                    f"got {type(spec).__name__}")
+    return _factories()[spec](op)
 
 
 def operator_fingerprint(op, precond: PrecondLike = None) -> str:
     """Content hash identifying an operator (and optionally a precond spec).
 
-    Two operator objects with the same class, static aux data and array
-    contents hash identically — this is the cache key under which built
-    preconditioners and compiled solver programs are reused across
-    requests (:mod:`repro.service`): repeat traffic against the same A
-    must not rebuild block inverses or retrace the step program just
-    because the caller re-constructed the operator object.
-
-    ``precond`` folds a name spec or a built :class:`Preconditioner` into
-    the key (a built instance hashes by its own pytree contents, so two
-    differently-parameterized block-Jacobi instances never collide).
+    The implementation moved to :func:`repro.api.operator_fingerprint`
+    (PR 5): the fingerprint is the key of the session cache in
+    :mod:`repro.api`, which is the ONE place built preconditioners and
+    compiled solver programs are memoized (the service registry consumes
+    it).  This delegate keeps the historical import path working.
     """
-    import hashlib
-
-    import numpy as np
-
-    h = hashlib.sha256()
-
-    def feed(obj, tag):
-        h.update(tag.encode())
-        leaves, treedef = jax.tree_util.tree_flatten(obj)
-        h.update(type(obj).__name__.encode())
-        h.update(repr(treedef).encode())
-        for leaf in leaves:
-            arr = np.asarray(leaf)
-            h.update(str(arr.dtype).encode())
-            h.update(str(arr.shape).encode())
-            h.update(arr.tobytes())
-
-    feed(op, "op:")
-    if precond is not None:
-        if isinstance(precond, str):
-            h.update(f"precond-name:{precond}".encode())
-        else:
-            feed(precond, "precond:")
-    return h.hexdigest()
+    from repro.api import operator_fingerprint as _fp
+    return _fp(op, precond)
 
 
 def preconditioned_system(sub, op, b: jax.Array, precond: PrecondLike

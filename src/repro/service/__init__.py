@@ -11,6 +11,12 @@ splicing fresh Krylov state into the live block
 (:mod:`repro.core.multirhs`'s ``init_state / step_chunk /
 splice_columns`` open-loop API).
 
+The engine drives :class:`repro.api.LinearSolver` sessions (PR 5): the
+registry binds engine-facing names to sessions from the content-keyed
+cache in :mod:`repro.api`, so preconditioner builds and compiled step
+programs are shared with direct ``repro.make_solver`` users — and
+across engines — not just within one registry.
+
 Quickstart::
 
     from repro.service import ServiceConfig, SolveEngine

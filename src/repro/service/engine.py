@@ -13,8 +13,10 @@ Between chunks the engine retires finished columns — converged, broken
 down, past their per-request ``maxiter`` budget (enforced on-device by
 the per-column mask), or past their wall-clock ``deadline`` — and
 refills the freed slots mid-flight by splicing fresh right-hand sides
-and reset per-column Krylov state into the live state pytree
-(:func:`repro.core.multirhs.splice_columns`).  Columns are independent
+and reset per-column Krylov state into the live state pytree (the
+``splice_step`` handle of the operator's bound
+:class:`repro.api.LinearSolver` session — admission fused into the
+chunk as ONE compiled program).  Columns are independent
 in "individual" blocked mode, so multiplexing is *exact*: a request's
 trajectory is the one it would have had in a standalone
 ``solve_batched`` call (property-tested in tests/test_service.py).

@@ -1,39 +1,31 @@
-"""Operator registry: fingerprint-keyed reuse of preconditioners and
-compiled step programs.
+"""Operator registry: named views onto :mod:`repro.api` solver sessions.
 
 Serving traffic is repetitive: many requests arrive against the same
-operator A (same mesh, same physics), often re-constructed per request by
-the caller.  The registry deduplicates by *content*
-(:func:`repro.precond.operator_fingerprint` hashes the operator pytree
-and the precond spec), so for repeat traffic:
+operator A (same mesh, same physics), often re-constructed per request
+by the caller.  Deduplication by *content* — and everything expensive
+that rides on it: building the preconditioner ONCE, tracing the
+open-loop ``init`` / ``step_chunk`` / ``splice_step`` programs ONCE —
+lives in :mod:`repro.api` since PR 5: :func:`repro.api.make_solver`
+memoizes whole :class:`~repro.api.LinearSolver` sessions under the
+operator-content fingerprint, so the registry here is a thin consumer:
+it binds engine-facing *names* (and the engine's chunk size) to
+sessions, and two registrations with equal content — in this engine, in
+another engine, or via a direct ``repro.make_solver`` call — share one
+session and therefore one set of compiled programs.
 
-* the preconditioner is built ONCE — block-Jacobi's dense block
-  inversions and SSOR's setup are the expensive parts, and they are
-  exactly what the fingerprint cache reuses;
-* the compiled programs are reused — ``init_fn`` / ``step_fn`` /
-  ``splice_step_fn`` close over the operator arrays, so a fresh entry
-  would retrace and recompile; the cache hands back the entry that
-  already traced them.
-
-Each :class:`RegisteredOperator` owns the substrate-bound block matvec
-(operator dispatch intact — a banded ELL operator on the pallas substrate
-runs the block-ELL kernel) composed with the M^{-1}-apply, exactly as
-:func:`repro.precond.base.wrap_block_preconditioned` builds it for
-``solve_batched``, plus the jitted open-loop programs of
-:mod:`repro.core.multirhs` sized to the engine's ``(n, max_batch)``
-resident block.
+Each :class:`RegisteredOperator` exposes the session's composed
+``M^{-1} ∘ A`` block matvec (operator dispatch intact — a banded ELL
+operator on the pallas substrate runs the block-ELL kernel) and the
+three jitted open-loop programs sized to the engine's
+``(n, max_batch)`` resident block, exactly as before the promotion.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
 
-import jax
-
-from repro.core.multirhs import init_state, splice_columns, step_chunk
-from repro.core.substrate import get_substrate
+from repro.api import LinearSolver, make_solver, operator_fingerprint
 from repro.core.types import SolverConfig
-from repro.precond.base import (PrecondLike, operator_fingerprint,
-                                resolve_precond)
+from repro.precond.base import PrecondLike
 
 from .types import ServiceConfig
 
@@ -41,72 +33,42 @@ from .types import ServiceConfig
 class RegisteredOperator:
     """One operator (+ optional preconditioner) bound to the engine block.
 
-    Holds the built preconditioner, the composed ``M^{-1} ∘ A`` block
-    matvec, and the three jitted programs the engine drives.  All three
-    close over the operator arrays — reusing the entry (the registry's
-    job) is what reuses their compilations.
+    A named, chunk-sized view onto a cached :class:`repro.api
+    .LinearSolver` session: the built preconditioner, the composed
+    block matvec, and the compiled open-loop programs all belong to the
+    session — reusing the session (the api cache's job) is what reuses
+    them.
     """
 
     def __init__(self, name: str, op, precond: PrecondLike,
-                 scfg: ServiceConfig, fingerprint: str):
+                 scfg: ServiceConfig, session: LinearSolver):
         self.name = name
         self.op = op
-        self.fingerprint = fingerprint
         self.scfg = scfg
-        sub = get_substrate(scfg.substrate)
-        self.sub = sub
+        self.session = session
+        self.fingerprint = session.fingerprint
+        self.sub = session.sub
         #: kernel-backed path assertion: a pallas-substrate service must
-        #: actually be running the hand-tiled kernels, not a lookalike.
-        self.kernel_backed = bool(getattr(sub, "kernel_backed", False))
-        if getattr(sub, "name", None) == "pallas":
-            assert self.kernel_backed, (
-                "substrate resolved to 'pallas' but is not kernel-backed")
-
-        self.precond = resolve_precond(precond, op)   # built ONCE
-        raw_bmv = sub.as_block_matvec(op)
-        if self.precond is None:
-            self.papply = None
-            self.bmv = raw_bmv
-        else:
-            papply = sub.as_precond_apply(self.precond)
-            self.papply = papply
-            self.bmv = lambda X: papply(raw_bmv(X))
-
-        n = op.shape[0]
-        self.n = n
+        #: actually be running the hand-tiled kernels, not a lookalike
+        #: (the session asserts it at construction; surfaced here).
+        self.kernel_backed = session.kernel_backed
+        self.precond = session.precond          # built ONCE, by the session
+        self.bmv = session.block_matvec
+        self.n = op.shape[0]
         self.dtype = op.dtype
-        # solver config for the resident block: per-column tol/maxiter
-        # vectors override these defaults per request
-        cfg = SolverConfig(tol=scfg.tol, maxiter=scfg.maxiter)
-        self._cfg = cfg
 
         # The engine hands these RAW right-hand-side blocks; the left
         # preconditioning of the system (solve M^{-1} A x = M^{-1} b)
-        # happens inside the jitted program, exactly as
-        # wrap_block_preconditioned does for solve_batched.
-        def prep(B):
-            return self.papply(B) if self.papply is not None else B
-
-        self.init_fn = jax.jit(
-            lambda B, tolv, mitv: init_state(
-                self.bmv, prep(B), config=cfg, substrate=sub,
-                tol=tolv, maxiter=mitv))
+        # happens inside the session's jitted programs.  Admission stays
+        # fused: splice-then-step is ONE compiled program, so a chunk
+        # boundary with refills costs one dispatch + one host read, same
+        # as a chunk without.
         chunk = int(scfg.chunk)
-        self.step_fn = jax.jit(
-            lambda st: step_chunk(self.bmv, st, chunk, config=cfg,
-                                  substrate=sub))
-        # admission fused into the chunk: splice-then-step is ONE
-        # compiled program, so a chunk boundary with refills costs one
-        # dispatch + one host read, same as a chunk without (this is the
-        # "one program regardless of request mix" property, taken
-        # literally — per-chunk host round-trips are what a CPU-bound
-        # service actually pays for)
-        self.splice_step_fn = jax.jit(
-            lambda st, mask, Bn, tolv, mitv: step_chunk(
-                self.bmv,
-                splice_columns(self.bmv, st, mask, prep(Bn),
-                               substrate=sub, tol=tolv, maxiter=mitv),
-                chunk, config=cfg, substrate=sub))
+        self.init_fn = lambda B, tolv, mitv: session.init(
+            B, tol=tolv, maxiter=mitv)
+        self.step_fn = lambda st: session.step_chunk(st, chunk)
+        self.splice_step_fn = lambda st, mask, Bn, tolv, mitv: \
+            session.splice_step(st, mask, Bn, tolv, mitv, chunk)
 
     def __repr__(self):
         pc = getattr(self.precond, "name", None)
@@ -115,12 +77,14 @@ class RegisteredOperator:
 
 
 class OperatorRegistry:
-    """Content-addressed operator table.
+    """Content-addressed operator table (names -> sessions).
 
     ``register`` is idempotent under re-registration of equal content:
     the same (operator bytes, precond spec) fingerprint returns the
     EXISTING entry — preconditioner and compiled programs included —
-    under whichever names it was registered.
+    under whichever names it was registered.  The fingerprinting and the
+    session reuse are :func:`repro.api.make_solver`'s; this class only
+    maps names.
     """
 
     def __init__(self, scfg: ServiceConfig):
@@ -128,9 +92,28 @@ class OperatorRegistry:
         self._by_name: Dict[str, RegisteredOperator] = {}
         self._by_fp: Dict[str, RegisteredOperator] = {}
 
+    def _make_session(self, op, precond: PrecondLike) -> LinearSolver:
+        scfg = self._scfg
+        return make_solver(
+            "p-bicgsafe", op, precond=precond, substrate=scfg.substrate,
+            config=SolverConfig(tol=scfg.tol, maxiter=scfg.maxiter))
+
     def register(self, op, precond: PrecondLike = None,
                  name: Optional[str] = None) -> str:
-        fp = operator_fingerprint(op, precond)
+        # fingerprint FIRST, session only on a miss: re-registering known
+        # content must stay cheap even when the api layer's LRU has
+        # evicted the session (no throwaway preconditioner builds)
+        try:
+            fp = operator_fingerprint(op, precond)
+        except TypeError:
+            # the engine needs op.shape/op.dtype for request validation
+            # and the service's whole reuse story is content addressing —
+            # bare matvec callables support neither
+            raise TypeError(
+                "the solve service requires a content-addressable operator "
+                f"object (got {type(op).__name__}); wrap the matvec in an "
+                "operator class (Dense/CSR/ELL/Stencil7) to register it"
+            ) from None
         entry = self._by_fp.get(fp)
         if entry is None:
             if name is None:                 # first free auto name
@@ -143,7 +126,10 @@ class OperatorRegistry:
                 raise ValueError(
                     f"operator name {name!r} already registered with "
                     "different content")
-            entry = RegisteredOperator(name, op, precond, self._scfg, fp)
+            # session built only after the name conflict check: a
+            # rejected registration must not occupy an api cache slot
+            session = self._make_session(op, precond)
+            entry = RegisteredOperator(name, op, precond, self._scfg, session)
             self._by_fp[fp] = entry
             self._by_name[name] = entry
         elif name is not None:

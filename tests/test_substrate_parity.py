@@ -632,6 +632,121 @@ def test_solve_batched_bitwise_pre_refactor_regression(x64, prob):
             "init_state/step_chunk refactor")
 
 
+# ---------------------------------------------------------------------------
+# the session path (repro.api) preserves the structural invariants on
+# every binding: single, batched, distributed (PR 5 acceptance)
+# ---------------------------------------------------------------------------
+
+def _session_reduction_sees_matvec(method, op, b, substrate) -> bool:
+    """The overlap probe of _reduction_sees_matvec, through a bound
+    session: tag the matvec and the fused-dot partials with
+    optimization_barrier, then walk the while-body (inside the session's
+    jitted program — find_while_body recurses through pjit) for a path
+    from the reduction back to the matvec tag."""
+    import repro
+    spy = lax.optimization_barrier
+    if b.ndim == 2:
+        base = jax.vmap(op.matvec, in_axes=1, out_axes=1)
+        mv = lambda x: lax.optimization_barrier(base(x))   # noqa: E731
+        session = repro.make_solver(method, mv, substrate=substrate,
+                                    config=SolverConfig(maxiter=10),
+                                    dot_reduce=spy, blocked=True)
+        jaxpr = jax.make_jaxpr(lambda bb: session.solve_many(bb))(b)
+    else:
+        mv = lambda x: lax.optimization_barrier(op.matvec(x))  # noqa: E731
+        session = repro.make_solver(method, mv, substrate=substrate,
+                                    config=SolverConfig(maxiter=10),
+                                    dot_reduce=spy)
+        jaxpr = jax.make_jaxpr(lambda bb: session.solve(bb))(b)
+    body = _while_body(jaxpr.jaxpr)
+
+    dot_eqn, mv_outs = None, set()
+    for eqn in body.eqns:
+        if eqn.primitive.name != "optimization_barrier":
+            continue
+        if eqn.outvars[0].aval.shape[:1] == (9,):
+            dot_eqn = eqn
+        else:
+            mv_outs.update(eqn.outvars)
+    assert dot_eqn is not None, "fused 9-dot phase not found in loop body"
+    assert mv_outs, "matvec tag not found in loop body"
+
+    needed = {v for v in dot_eqn.invars if hasattr(v, "aval")
+              and not isinstance(v, jax.core.Literal)}
+    for eqn in reversed(body.eqns):
+        if eqn is dot_eqn:
+            continue
+        if any(ov in needed for ov in eqn.outvars):
+            needed |= {v for v in eqn.invars
+                       if not isinstance(v, jax.core.Literal)}
+    return bool(mv_outs & needed)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_session_overlap_edge_single(x64, substrate):
+    """p-BiCGSafe through a session keeps the no-dependency-edge overlap
+    (and ssBiCGSafe2 keeps the edge) — the jitted session program does
+    not serialize the reduction behind the matvec."""
+    op, b, _ = M.nonsym_dense(64)
+    assert not _session_reduction_sees_matvec("p-bicgsafe", op, b, substrate)
+    assert _session_reduction_sees_matvec("ssbicgsafe2", op, b, substrate)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_session_overlap_edge_batched(x64, substrate):
+    """solve_many through a session: the (9, m) block reduction keeps no
+    path from the in-flight block matvec."""
+    op, b, _ = M.nonsym_dense(64)
+    B = jnp.stack([b, 0.5 * b, b + 1.0], axis=1)
+    assert not _session_reduction_sees_matvec("p-bicgsafe", op, B, substrate)
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("sname,per_iter", [("ssbicgsafe2", 1),
+                                            ("p-bicgsafe", 1)])
+def test_session_sync_count(x64, substrate, sname, per_iter):
+    """ONE reduction per iteration through the session path — and zero
+    NEW reductions on the repeat solve (the program is reused, which is
+    the amortization the API redesign exists for)."""
+    import repro
+    op, b, _ = M.nonsym_dense(64)
+    counter = SyncCounter(identity_reduce)
+    session = repro.make_solver(sname, op, substrate=substrate,
+                                config=SolverConfig(maxiter=10),
+                                dot_reduce=counter)
+    session.solve(b)
+    assert counter.calls == 1 + per_iter
+    session.solve(2.0 * b)
+    assert counter.calls == 1 + per_iter, "repeat solve must not retrace"
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("m", [1, 4])
+@pytest.mark.parametrize("precond", [None, "block_jacobi"])
+def test_session_sharded_batched_single_psum_per_iter(x64, substrate, m,
+                                                      precond):
+    """The mesh-bound session lowers to EXACTLY ONE psum per iteration —
+    the (9, m) block — matching the legacy distributed driver probe
+    above (the session path must not add or split reductions)."""
+    import repro
+    from repro.core.compat import make_mesh
+
+    op, b, _ = M.convection_diffusion(8, peclet=1.0)
+    B_grid = jnp.stack([b * (j + 1) for j in range(m)],
+                       axis=1).reshape(8, 8, 8, m)
+    mesh = make_mesh((1,), ("rows",))
+    dist = repro.make_solver(
+        "p-bicgsafe", op, precond=precond,
+        substrate=substrate, config=SolverConfig(maxiter=10)).on_mesh(mesh)
+    jaxpr = jax.make_jaxpr(lambda BB: dist.solve_many(BB))(B_grid)
+    body = _find_while_body(jaxpr.jaxpr)
+    assert body is not None, "no while loop in the sharded batched solve"
+    assert _count_prim(body, "psum") == 1, "must be ONE reduction/iter"
+    psum_eqn = _find_prim_eqn(body, "psum")
+    assert psum_eqn.invars[0].aval.shape == (9, m), \
+        "the one reduction must carry the whole (9, m) partial block"
+
+
 def test_batched_m1_with_squeezing_dot_reduce(x64):
     """End-to-end m=1 regression: a dot_reduce that squeezes the
     degenerate RHS axis (returning (9,) for the (9, 1) block) must still

@@ -14,6 +14,8 @@
                                             sequential / static batch)
   bench_api           bind-once sessions   (repeat-solve amortization vs
                                             legacy free functions)
+  bench_robustness    guarded solves       (clean-path overhead budget +
+                                            fault-injection recovery)
 
 Artifacts land in experiments/*.json; stdout is the human summary.
 """
@@ -34,11 +36,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_api, bench_convergence, bench_cost, bench_multirhs,
-                   bench_overlap, bench_precond, bench_roofline, bench_rr,
-                   bench_scaling, bench_service)
+                   bench_overlap, bench_precond, bench_robustness,
+                   bench_roofline, bench_rr, bench_scaling, bench_service)
 
     benches = {
         "api": bench_api.run,
+        "robustness": bench_robustness.run,
         "convergence": bench_convergence.run,
         "rr": bench_rr.run,
         "cost": bench_cost.run,

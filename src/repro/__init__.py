@@ -29,6 +29,7 @@ from repro.api import (DistributedSolver, LinearSolver, make_solver,
 from repro.core import (SOLVERS, CSROperator, DenseOperator, ELLOperator,
                         Preconditioner, SolveResult, SolverConfig,
                         Stencil7Operator, SUBSTRATES, get_substrate)
+from repro.resilience import GuardedSolver, RecoveryPolicy, SolveStatus
 
 __all__ = [
     # the front door
@@ -39,4 +40,6 @@ __all__ = [
     "DenseOperator", "CSROperator", "ELLOperator", "Stencil7Operator",
     "Preconditioner",
     "SUBSTRATES", "get_substrate",
+    # guarded solves (repro.resilience; make_solver(recovery=...))
+    "SolveStatus", "RecoveryPolicy", "GuardedSolver",
 ]

@@ -652,7 +652,8 @@ def make_solver(method: str = "p-bicgsafe", operator=None, *,
                 substrate: SubstrateLike = "jnp",
                 config: SolverConfig = SolverConfig(),
                 dot_reduce: Optional[DotReduce] = None,
-                blocked: bool = False) -> LinearSolver:
+                blocked: bool = False,
+                recovery=None) -> LinearSolver:
     """Bind ``method`` to ``operator`` once; returns a (usually cached)
     :class:`LinearSolver` session.
 
@@ -674,14 +675,39 @@ def make_solver(method: str = "p-bicgsafe", operator=None, *,
       blocked: ``operator`` is already an ``(n, m) -> (n, m)`` block
         matvec (advanced; multi-RHS/open-loop entry points only — this
         is the session analogue of ``solve_batched(blocked=True)``).
+      recovery: ``None`` | ``True`` | :class:`repro.resilience
+        .RecoveryPolicy` — returns a :class:`repro.resilience
+        .GuardedSolver` wrapping a guarded session
+        (``config.guard=True``; the fused reduction widens to (11, m)
+        carrying in-flight health rows) whose chunked driver applies the
+        policy's recovery actions — residual replacement, restart,
+        method fallback, substrate degradation — at chunk boundaries.
+        ``True`` means the default policy.  p-BiCGSafe only (the guard
+        rides the batched pipelined iteration).
 
     Two calls with equal *content* (operator bytes, precond spec,
     substrate name, config, method) return the SAME session — the built
     preconditioner and every compiled program are reused.  This is the
-    cache :mod:`repro.service`'s registry consumes.
+    cache :mod:`repro.service`'s registry consumes.  Guarded wrappers
+    are thin, host-side objects built per call; the guarded *session*
+    underneath is cached by the same content key.
     """
     if operator is None:
         raise TypeError("make_solver requires an operator")
+    if recovery is not None and recovery is not False:
+        # lazy import: repro.resilience imports repro.api for fallbacks
+        from .resilience.guard import GuardedSolver, guarded_config
+        from .resilience.policy import RecoveryPolicy
+        policy = RecoveryPolicy() if recovery is True else recovery
+        if not isinstance(policy, RecoveryPolicy):
+            raise TypeError(
+                f"recovery must be None, True or a RecoveryPolicy; got "
+                f"{type(recovery).__name__}")
+        inner = make_solver(method, operator, precond=precond,
+                            substrate=substrate,
+                            config=guarded_config(config, policy),
+                            dot_reduce=dot_reduce, blocked=blocked)
+        return GuardedSolver(inner, policy)
     sub = get_substrate(substrate)
     sub_name = _substrate_cache_name(sub)
     try:

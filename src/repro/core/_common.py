@@ -172,6 +172,43 @@ def bicgsafe_coefficients(dots: jax.Array, i: jax.Array,
     return beta, alpha, zeta, eta, f, rr, breakdown
 
 
+def bicgsafe_breakdown_code(dots: jax.Array, i: jax.Array,
+                            alpha_prev, zeta_prev, f_prev,
+                            eps: float) -> jax.Array:
+    """Typed cause of a BiCGSafe coefficient breakdown, as an int32
+    :class:`repro.core.types.SolveStatus` code (0 == no breakdown).
+
+    Recomputes the same three denominators :func:`bicgsafe_coefficients`
+    guards with ``safe_div`` (XLA CSEs the shared subexpressions, so this
+    adds a handful of scalar compares, no vector work) and names the
+    first offender in precedence order rho -> alpha -> omega, matching
+    the ``breakdown`` flag's ``first``/``i>0`` gating exactly:
+
+    * BREAKDOWN_RHO:   beta denominator ``zeta_{i-1} * f_{i-1}`` (i > 0)
+    * BREAKDOWN_ALPHA: alpha denominator ``g + beta * h`` (incl. the
+      i == 0 pivot ``(s,s)`` of ``zeta_0 = d/a``)
+    * BREAKDOWN_OMEGA: zeta/eta denominator ``a*b - c^2`` (i > 0)
+    """
+    from .types import SolveStatus
+    a, b, c, d, e, f, g, h, rr = (dots[k] for k in range(9))
+    del d, e, rr
+    first = i == 0
+
+    bad_rho = (~first) & (jnp.abs(zeta_prev * f_prev) <= eps)
+    beta_g, _ = safe_div(alpha_prev * f, zeta_prev * f_prev, eps)
+    beta = jnp.where(first, jnp.zeros_like(f), beta_g)
+    bad_alpha = jnp.abs(g + beta * h) <= eps
+    bad_pivot = jnp.where(first, jnp.abs(a) <= eps,
+                          jnp.abs(a * b - c * c) <= eps)
+
+    code = jnp.where(bad_pivot, SolveStatus.BREAKDOWN_OMEGA.value, 0)
+    code = jnp.where(first & bad_pivot, SolveStatus.BREAKDOWN_ALPHA.value,
+                     code)
+    code = jnp.where(bad_alpha, SolveStatus.BREAKDOWN_ALPHA.value, code)
+    code = jnp.where(bad_rho, SolveStatus.BREAKDOWN_RHO.value, code)
+    return code.astype(jnp.int32)
+
+
 def pipelined_recurrence_tail(q, s, As, g, Aw, alpha, zeta, eta):
     """p-BiCGSafe's recurred A-images after MV #2 (Aw = A w_i).
 

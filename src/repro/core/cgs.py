@@ -17,8 +17,8 @@ import jax.numpy as jnp
 from ..precond.base import PrecondLike, preconditioned_system
 from ._common import init_guess, safe_div, tree_select
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, history_init,
-                    history_update, identity_reduce)
+from .types import (DotReduce, SolveResult, SolverConfig, classify_status,
+                    history_init, history_update, identity_reduce)
 
 
 def cgs_solve(matvec: Callable,
@@ -40,6 +40,9 @@ def cgs_solve(matvec: Callable,
 
     init = dot_reduce(sub.dots([(r0, r0), (rs, r0)]))
     norm_r0 = jnp.sqrt(init[0])
+    # ||r_0|| == 0: converge at t=0 instead of dividing by zero.
+    conv0 = norm_r0 == 0
+    norm_r0 = jnp.where(conv0, jnp.ones_like(norm_r0), norm_r0)
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
 
@@ -47,8 +50,8 @@ def cgs_solve(matvec: Callable,
         x=x, r=r0, p=r0, u=r0, q=z0,
         rho=init[1], rr=init[0],
         i=jnp.zeros((), jnp.int32),
-        relres=jnp.ones((), norm_r0.dtype),
-        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
+        converged=conv0, breakdown=jnp.zeros((), bool),
         hist=hist)
 
     def cond(st):
@@ -91,4 +94,6 @@ def cgs_solve(matvec: Callable,
                              jnp.sqrt(jnp.abs(st["rr"])) / norm_r0)
     converged = st["converged"] | (final_relres <= config.tol)
     return SolveResult(st["x"], st["i"], final_relres, converged,
-                       st["breakdown"], st["hist"])
+                       st["breakdown"], st["hist"],
+                       classify_status(converged, st["breakdown"],
+                                       final_relres))

@@ -182,7 +182,7 @@ def build_stencil_solver(solver: Callable,
     in_specs = P(axes)
     out_specs = SolveResult(
         x=P(axes), iterations=P(), relres=P(), converged=P(),
-        breakdown=P(), residual_history=P())
+        breakdown=P(), residual_history=P(), status=P())
 
     fn = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
                           out_specs=out_specs, check_vma=False)
@@ -279,7 +279,7 @@ def build_stencil_solver_batched(op: Stencil7Operator,
     in_specs = P(axes)
     out_specs = SolveResult(
         x=P(axes), iterations=P(), relres=P(), converged=P(),
-        breakdown=P(), residual_history=P())
+        breakdown=P(), residual_history=P(), status=P())
 
     sharded = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
                                out_specs=out_specs, check_vma=False)

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from ..precond.base import PrecondLike, preconditioned_system
 from ._common import init_guess, safe_div, tree_select
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, history_init,
-                    history_update, identity_reduce)
+from .types import (DotReduce, SolveResult, SolverConfig, classify_status,
+                    history_init, history_update, identity_reduce)
 
 
 def gpbicg_solve(matvec: Callable,
@@ -39,6 +39,9 @@ def gpbicg_solve(matvec: Callable,
 
     init = dot_reduce(sub.dots([(r0, r0), (rs, r0)]))
     norm_r0 = jnp.sqrt(init[0])
+    # ||r_0|| == 0: converge at t=0 instead of dividing by zero.
+    conv0 = norm_r0 == 0
+    norm_r0 = jnp.where(conv0, jnp.ones_like(norm_r0), norm_r0)
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
 
@@ -49,8 +52,8 @@ def gpbicg_solve(matvec: Callable,
         beta=zero, zeta=jnp.ones((), b.dtype),
         rr=init[0],
         i=jnp.zeros((), jnp.int32),
-        relres=jnp.ones((), norm_r0.dtype),
-        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
+        converged=conv0, breakdown=jnp.zeros((), bool),
         hist=hist)
 
     def cond(st):
@@ -113,4 +116,6 @@ def gpbicg_solve(matvec: Callable,
                              jnp.sqrt(jnp.abs(st["rr"])) / norm_r0)
     converged = st["converged"] | (final_relres <= config.tol)
     return SolveResult(st["x"], st["i"], final_relres, converged,
-                       st["breakdown"], st["hist"])
+                       st["breakdown"], st["hist"],
+                       classify_status(converged, st["breakdown"],
+                                       final_relres))

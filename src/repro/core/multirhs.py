@@ -61,10 +61,31 @@ import jax
 import jax.numpy as jnp
 
 from ..precond.base import PrecondLike, wrap_block_preconditioned
-from ._common import bicgsafe_coefficients, pipelined_recurrence_tail
+from ._common import (bicgsafe_breakdown_code, bicgsafe_coefficients,
+                      pipelined_recurrence_tail)
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, identity_reduce,
-                    per_column)
+from .types import (DotReduce, SolveResult, SolveStatus, SolverConfig,
+                    identity_reduce, per_column)
+
+#: Per-column health/monitor fields carried by a GUARDED state pytree
+#: (``SolverConfig.guard``); their presence marks a state as guarded.
+GUARD_FIELDS = ("status", "drift", "drift_flag", "stall", "best_relres",
+                "stagnant", "replacements", "restarts")
+
+
+def _guard_init(m: int, rdtype, conv0: jax.Array) -> dict:
+    """Fresh guard-field values for ``m`` columns (``conv0``: columns that
+    are converged at t=0, i.e. zero right-hand sides)."""
+    return dict(
+        status=jnp.where(conv0, SolveStatus.CONVERGED.value,
+                         SolveStatus.RUNNING.value).astype(jnp.int32),
+        drift=jnp.zeros((m,), rdtype),
+        drift_flag=jnp.zeros((m,), bool),
+        stall=jnp.zeros((m,), jnp.int32),
+        best_relres=jnp.full((m,), jnp.inf, rdtype),
+        stagnant=jnp.zeros((m,), bool),
+        replacements=jnp.zeros((m,), jnp.int32),
+        restarts=jnp.zeros((m,), jnp.int32))
 
 
 def _masked(mask_cols, new, old):
@@ -146,6 +167,13 @@ def init_state(bmv: Callable,
     S0 = bmv(R0)                                  # block MV (init): A R_0
 
     norm_r0 = jnp.sqrt(dot_reduce(sub.dots([(R0, R0)]))[0])   # (m,)
+    # Zero right-hand side (or exact initial guess): ||r_0|| == 0 means X
+    # already solves that column — mark it converged at t=0 with relres 0
+    # instead of letting the body divide by norm_r0 and poison the column
+    # with NaN.  Nonzero columns take the same values as before bitwise.
+    # (broadcast: a squeezing dot_reduce may return norm_r0 as a scalar
+    # for m=1, but the per-column carries must stay (m,))
+    conv0 = jnp.broadcast_to(norm_r0 == 0, (m,))
     Z0 = jnp.zeros_like(B)
     ones_m = jnp.ones((m,), B.dtype)
     if config.record_history:
@@ -158,16 +186,19 @@ def init_state(bmv: Callable,
     maxiter_col = per_column(config.maxiter if maxiter is None else maxiter,
                              m, jnp.int32, name="maxiter")
 
-    return dict(
+    st = dict(
         x=X, r=R0, s=S0, p=Z0, u=Z0, t=Z0, y=Z0, z=Z0, w=Z0, l=Z0, g=Z0,
         rs=RS,
         alpha=jnp.zeros((m,), B.dtype), zeta=ones_m, f=ones_m,
         i=jnp.zeros((), jnp.int32),
         iterations=jnp.zeros((m,), jnp.int32),
-        relres=jnp.ones((m,), norm_r0.dtype),
-        converged=jnp.zeros((m,), bool), breakdown=jnp.zeros((m,), bool),
+        relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
+        converged=conv0, breakdown=jnp.zeros((m,), bool),
         norm_r0=norm_r0, tol=tol_col, col_maxiter=maxiter_col,
         hist=hist)
+    if config.guard:
+        st.update(_guard_init(m, norm_r0.dtype, conv0))
+    return st
 
 
 def splice_columns(bmv: Callable,
@@ -243,15 +274,23 @@ def splice_columns(bmv: Callable,
     out["zeta"] = sca(jnp.ones((m,), dt), state["zeta"])
     out["f"] = sca(jnp.ones((m,), dt), state["f"])
     out["iterations"] = sca(jnp.zeros((m,), jnp.int32), state["iterations"])
-    out["relres"] = sca(jnp.ones((m,), state["relres"].dtype),
+    # Zero right-hand sides spliced in are converged at t=0 (see
+    # init_state) — same guard against the norm_r0 division.
+    conv_new = jnp.broadcast_to(norm_new == 0, (m,))
+    out["relres"] = sca(jnp.where(conv_new, 0.0, 1.0
+                                  ).astype(state["relres"].dtype),
                         state["relres"])
-    out["converged"] = sca(jnp.zeros((m,), bool), state["converged"])
+    out["converged"] = sca(conv_new, state["converged"])
     out["breakdown"] = sca(jnp.zeros((m,), bool), state["breakdown"])
     out["norm_r0"] = sca(norm_new, state["norm_r0"])
     out["tol"] = sca(tol_col, state["tol"])
     out["col_maxiter"] = sca(maxiter_col, state["col_maxiter"])
     if state["hist"].shape[0]:
         out["hist"] = jnp.where(col, jnp.nan, state["hist"])
+    if "status" in state:                        # guarded state: fresh
+        fresh = _guard_init(m, state["norm_r0"].dtype, conv_new)
+        for k in GUARD_FIELDS:
+            out[k] = sca(fresh[k], state[k])
     return out
 
 
@@ -262,7 +301,16 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
     Shared verbatim by :func:`solve_batched` and :func:`step_chunk` — the
     single (9, m) reduction, the in-kernel convergence mask, and the
     overlap structure live here and ONLY here.
+
+    With ``config.guard`` the fused phase is the (11, m) health variant
+    (same single reduction, same operand independence from the in-flight
+    matvec) and the state additionally carries per-column typed status
+    codes, a NaN/Inf detector, the Cools drift bound for on-trigger
+    residual replacement, and a stagnation counter — everything
+    :class:`repro.resilience.GuardedSolver` reads at chunk boundaries.
+    Unguarded, the emitted program is bit-for-bit the historical one.
     """
+    guard = config.guard
 
     def body(st):
         r, s, y, t_prev = st["r"], st["s"], st["y"], st["t"]
@@ -271,9 +319,15 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
         active = active_columns(st)                               # (m,)
 
         # Block MV and the single fused (9, m) reduction — mutually
-        # independent, exactly as in the m=1 pipelined iteration.
+        # independent, exactly as in the m=1 pipelined iteration.  The
+        # guarded (11, m) phase additionally reads the PREVIOUS iterate
+        # x (a loop-carried value, no edge to As) for its health rows.
         As = bmv(s)
-        dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, RS))
+        if guard:
+            dots = dot_reduce(
+                sub.bicgsafe_dots_health(s, y, r, t_prev, RS, st["x"]))
+        else:
+            dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, RS))
 
         # Each column's i=0 branch keys off its OWN iteration count, so a
         # freshly spliced column in a long-running block initializes its
@@ -284,6 +338,20 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
             eps)                                                  # (m,)
         relres = jnp.sqrt(jnp.abs(rr)) / st["norm_r0"]
         done = relres <= st["tol"]
+
+        if guard:
+            # In-reduction health: rows 9/10 of the fused phase.  A
+            # non-finite probe (NaN/Inf anywhere in s/y/t/rs/x) or rr/xx
+            # freezes the column exactly like a coefficient breakdown —
+            # the poisoned vectors never advance, so NaN cannot spread to
+            # the rest of the resident block's history.
+            xx, probe = dots[9], dots[10]
+            nonfinite = ~(jnp.isfinite(probe) & jnp.isfinite(rr)
+                          & jnp.isfinite(xx))
+            code = bicgsafe_breakdown_code(
+                dots, st["iterations"], st["alpha"], st["zeta"], st["f"],
+                eps)
+            bad = bad | nonfinite
 
         # Per-RHS freeze mask: only active-and-unfinished columns advance;
         # converged / broken-down columns stay at their final state.
@@ -317,7 +385,9 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
         else:
             hist_i = st["hist"]
 
-        return dict(
+        iters_next = jnp.where(advance, st["iterations"] + 1,
+                               st["iterations"])
+        out = dict(
             x=x_next, r=r_next, s=upd(s_next, s),
             p=p, u=u, t=t, y=y_next, z=z, w=w,
             l=upd(l, st["l"]), g=upd(g_next, st["g"]),
@@ -325,14 +395,68 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
             alpha=upd(alpha, st["alpha"]), zeta=upd(zeta, st["zeta"]),
             f=upd(f, st["f"]),
             i=st["i"] + 1,
-            iterations=jnp.where(advance, st["iterations"] + 1,
-                                 st["iterations"]),
+            iterations=iters_next,
             relres=relres_out,
             converged=st["converged"] | (active & done),
             breakdown=st["breakdown"] | (active & bad & ~done),
             norm_r0=st["norm_r0"], tol=st["tol"],
             col_maxiter=st["col_maxiter"],
             hist=hist_i)
+
+        if guard:
+            # Typed per-column status: first terminal event wins; columns
+            # that burn their budget are stamped MAXITER as they cross it.
+            sts = st["status"]
+            sts = jnp.where(active & done,
+                            SolveStatus.CONVERGED.value, sts)
+            sts = jnp.where(active & ~done & nonfinite,
+                            SolveStatus.NONFINITE.value, sts)
+            sts = jnp.where(active & ~done & ~nonfinite & bad,
+                            jnp.maximum(code, SolveStatus.BREAKDOWN.value),
+                            sts)
+            sts = jnp.where(advance & (iters_next >= st["col_maxiter"])
+                            & (sts == SolveStatus.RUNNING.value),
+                            SolveStatus.MAXITER.value, sts)
+
+            # Cools / van-der-Vorst–Ye drift bound: the gap between the
+            # recurred and true residual grows like
+            # eps * sum_i (||A|| ||x_i|| + ||r_i||); once the bound
+            # approaches the ABSOLUTE tolerance tol * ||r_0|| (times
+            # drift_scale), the recurred residual can no longer be
+            # trusted for the convergence decision and the policy should
+            # force a replacement.  ||A|| is estimated in-flight as
+            # ||A r||/||r|| = sqrt(a/rr) — row 0 over row 8, free.
+            normr = jnp.sqrt(jnp.abs(rr))
+            eps_mach = jnp.finfo(r.dtype).eps
+            tiny = jnp.finfo(r.dtype).tiny
+            normA = jnp.sqrt(jnp.abs(dots[0])
+                             / jnp.maximum(jnp.abs(rr), tiny))
+            inc = eps_mach * (normA * jnp.sqrt(jnp.abs(xx)) + normr)
+            drift = jnp.where(advance, st["drift"] + inc, st["drift"])
+            drift_flag = st["drift_flag"] | (
+                advance
+                & (drift > config.drift_threshold(r.dtype)
+                   * st["tol"] * st["norm_r0"]))
+
+            # Stagnation monitor: consecutive iterations without a new
+            # best relative residual; sticky flag once the window is hit.
+            improved = relres < st["best_relres"]
+            best = jnp.where(advance & improved, relres,
+                             st["best_relres"])
+            stall = jnp.where(advance,
+                              jnp.where(improved, 0, st["stall"] + 1),
+                              st["stall"])
+            if config.stagnation_window > 0:
+                stagnant = st["stagnant"] | (
+                    stall >= config.stagnation_window)
+            else:
+                stagnant = st["stagnant"]
+
+            out.update(status=sts, drift=drift, drift_flag=drift_flag,
+                       stall=stall, best_relres=best, stagnant=stagnant,
+                       replacements=st["replacements"],
+                       restarts=st["restarts"])
+        return out
 
     return body
 
@@ -374,10 +498,32 @@ def step_chunk(bmv: Callable,
 
 
 def result_from_state(state: dict) -> SolveResult:
-    """Package a state pytree as the public :class:`SolveResult`."""
+    """Package a state pytree as the public :class:`SolveResult`.
+
+    ``status``: guarded states carry their typed per-column code through
+    the iteration (finalized here: still-RUNNING columns past budget ->
+    MAXITER); unguarded states get the coarse classification, with
+    still-active columns (open-loop mid-flight packaging) left RUNNING.
+    """
+    from .types import classify_status
+    if "status" in state:
+        sts = state["status"]
+        running = sts == SolveStatus.RUNNING.value
+        sts = jnp.where(running & state["converged"],
+                        SolveStatus.CONVERGED.value, sts)
+        sts = jnp.where(running & state["breakdown"] & ~state["converged"],
+                        SolveStatus.BREAKDOWN.value, sts)
+        sts = jnp.where((sts == SolveStatus.RUNNING.value)
+                        & (state["iterations"] >= state["col_maxiter"]),
+                        SolveStatus.MAXITER.value, sts)
+    else:
+        sts = jnp.where(
+            active_columns(state), SolveStatus.RUNNING.value,
+            classify_status(state["converged"], state["breakdown"],
+                            state["relres"]))
     return SolveResult(state["x"], state["iterations"], state["relres"],
                        state["converged"], state["breakdown"],
-                       state["hist"])
+                       state["hist"], sts.astype(jnp.int32))
 
 
 def solve_batched(matvec: Callable,

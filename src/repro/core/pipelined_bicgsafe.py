@@ -32,8 +32,8 @@ from ..precond.base import PrecondLike, preconditioned_system
 from ._common import (bicgsafe_coefficients, init_guess,
                       pipelined_recurrence_tail, tree_select)
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, history_init,
-                    history_update, identity_reduce)
+from .types import (DotReduce, SolveResult, SolverConfig, classify_status,
+                    history_init, history_update, identity_reduce)
 
 
 def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
@@ -52,6 +52,10 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
     s0 = matvec(r0)                                      # MV (init): s_0 = A r_0
 
     norm_r0 = jnp.sqrt(dot_reduce(sub.dots([(r0, r0)]))[0])
+    # ||r_0|| == 0 (zero rhs, or exact initial guess): x already solves
+    # the system — converge at t=0 instead of dividing by zero below.
+    conv0 = norm_r0 == 0
+    norm_r0 = jnp.where(conv0, jnp.ones_like(norm_r0), norm_r0)
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
 
@@ -61,8 +65,8 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
         x=x, r=r0, s=s0, p=z0, u=z0, t=z0, y=z0, z=z0, w=z0, l=z0, g=z0,
         alpha=zero, zeta=one, f=one,
         i=jnp.zeros((), jnp.int32),
-        relres=jnp.ones((), norm_r0.dtype),
-        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
+        converged=conv0, breakdown=jnp.zeros((), bool),
         hist=hist)
 
     def cond(st):
@@ -141,7 +145,9 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
 
     st = jax.lax.while_loop(cond, body, state)
     return SolveResult(st["x"], st["i"], st["relres"], st["converged"],
-                       st["breakdown"], st["hist"])
+                       st["breakdown"], st["hist"],
+                       classify_status(st["converged"], st["breakdown"],
+                                       st["relres"]))
 
 
 def pbicgsafe_solve(matvec: Callable,

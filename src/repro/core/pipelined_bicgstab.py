@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from ..precond.base import PrecondLike, preconditioned_system
 from ._common import init_guess, safe_div, tree_select
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, history_init,
-                    history_update, identity_reduce)
+from .types import (DotReduce, SolveResult, SolverConfig, classify_status,
+                    history_init, history_update, identity_reduce)
 
 
 def pbicgstab_solve(matvec: Callable,
@@ -50,6 +50,10 @@ def pbicgstab_solve(matvec: Callable,
     t0 = matvec(w0)
     init = dot_reduce(sub.dots([(r0, r0), (rs, r0), (rs, w0)]))
     norm_r0 = jnp.sqrt(init[0])
+    # ||r_0|| == 0: converge at t=0 — and don't report the init-time
+    # alpha_0 = 0/0 as a breakdown for an already-solved system.
+    conv0 = norm_r0 == 0
+    norm_r0 = jnp.where(conv0, jnp.ones_like(norm_r0), norm_r0)
     rho0 = init[1]
     alpha0, bad0 = safe_div(rho0, init[2], eps)
 
@@ -61,9 +65,9 @@ def pbicgstab_solve(matvec: Callable,
         alpha=alpha0, beta=zero, omega=jnp.ones((), b.dtype), rho=rho0,
         rr=init[0],
         i=jnp.zeros((), jnp.int32),
-        relres=jnp.ones((), norm_r0.dtype),
-        converged=jnp.zeros((), bool),
-        breakdown=bad0,
+        relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
+        converged=conv0,
+        breakdown=bad0 & ~conv0,
         hist=hist)
 
     def cond(st):
@@ -123,4 +127,6 @@ def pbicgstab_solve(matvec: Callable,
                              jnp.sqrt(jnp.abs(st["rr"])) / norm_r0)
     converged = st["converged"] | (final_relres <= config.tol)
     return SolveResult(st["x"], st["i"], final_relres, converged,
-                       st["breakdown"], st["hist"])
+                       st["breakdown"], st["hist"],
+                       classify_status(converged, st["breakdown"],
+                                       final_relres))

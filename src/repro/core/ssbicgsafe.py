@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from ..precond.base import PrecondLike, preconditioned_system
 from ._common import bicgsafe_coefficients, init_guess, tree_select
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, history_init,
-                    history_update, identity_reduce)
+from .types import (DotReduce, SolveResult, SolverConfig, classify_status,
+                    history_init, history_update, identity_reduce)
 
 
 def ssbicgsafe2_solve(matvec: Callable,
@@ -39,6 +39,9 @@ def ssbicgsafe2_solve(matvec: Callable,
 
     norm_r0_sq = dot_reduce(sub.dots([(r0, r0)]))[0]
     norm_r0 = jnp.sqrt(norm_r0_sq)
+    # ||r_0|| == 0: converge at t=0 instead of dividing by zero.
+    conv0 = norm_r0 == 0
+    norm_r0 = jnp.where(conv0, jnp.ones_like(norm_r0), norm_r0)
     z0 = jnp.zeros_like(b)
     hist = history_init(config, norm_r0.dtype)
     hist = history_update(hist, 0, jnp.ones_like(norm_r0), config)
@@ -49,8 +52,8 @@ def ssbicgsafe2_solve(matvec: Callable,
         x=x, r=r0, p=z0, u=z0, t=z0, y=z0, z=z0,
         alpha=zero, zeta=one, f=one,
         i=jnp.zeros((), jnp.int32),
-        relres=jnp.ones((), norm_r0.dtype),
-        converged=jnp.zeros((), bool), breakdown=jnp.zeros((), bool),
+        relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
+        converged=conv0, breakdown=jnp.zeros((), bool),
         hist=hist)
 
     def cond(st):
@@ -91,4 +94,6 @@ def ssbicgsafe2_solve(matvec: Callable,
 
     st = jax.lax.while_loop(cond, body, state)
     return SolveResult(st["x"], st["i"], st["relres"], st["converged"],
-                       st["breakdown"], st["hist"])
+                       st["breakdown"], st["hist"],
+                       classify_status(st["converged"], st["breakdown"],
+                                       st["relres"]))

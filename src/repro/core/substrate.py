@@ -50,6 +50,7 @@ import functools
 from typing import Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
 from . import linear_operator
 from ._common import local_dots
@@ -81,6 +82,18 @@ class Substrate:
         Reads ONLY {s, y, r, t_prev, rs} so it carries no dependency edge
         to the iteration's in-flight matvec (the overlap invariant).
         Returns (9,) local partials, or (9, m) for (n, m) multi-RHS blocks.
+        """
+        raise NotImplementedError
+
+    def bicgsafe_dots_health(self, s, y, r, t_prev, rs, x) -> jax.Array:
+        """Guarded fused phase: the 9 dots plus 2 in-reduction health rows.
+
+        Row 9 is ``x.x`` (solution-norm estimate for the drift bound),
+        row 10 a NaN/Inf finiteness probe ``sum(s+y+t_prev+rs+x)``.  ``x``
+        is the previous iterate (loop-carried), so the phase STILL has no
+        dependency edge to the in-flight matvec, and the whole (11,) /
+        (11, m) block is reduced by the solver's same single
+        ``dot_reduce`` — health monitoring costs zero extra reductions.
         """
         raise NotImplementedError
 
@@ -141,6 +154,14 @@ class JnpSubstrate(Substrate):
         v = dict(s=s, y=y, r=r, t=t_prev, rs=rs)
         return local_dots([(v[a], v[b]) for a, b in BICGSAFE_DOT_PAIRS])
 
+    def bicgsafe_dots_health(self, s, y, r, t_prev, rs, x):
+        v = dict(s=s, y=y, r=r, t=t_prev, rs=rs)
+        base = local_dots(
+            [(v[a], v[b]) for a, b in BICGSAFE_DOT_PAIRS] + [(x, x)])
+        comb = s + y + t_prev + rs + x
+        probe = jnp.sum(comb, axis=0) if comb.ndim == 2 else jnp.sum(comb)
+        return jnp.concatenate([base, probe[None]])
+
     def axpy_phase(self, vecs, scalars, mask=None):
         from repro.kernels import ref
         return ref.fused_axpy(vecs, scalars, mask=mask)
@@ -165,6 +186,10 @@ class PallasSubstrate(Substrate):
     def bicgsafe_dots(self, s, y, r, t_prev, rs):
         from repro.kernels import ops
         return ops.fused_dots(s, y, r, t_prev, rs)
+
+    def bicgsafe_dots_health(self, s, y, r, t_prev, rs, x):
+        from repro.kernels import ops
+        return ops.fused_dots_health(s, y, r, t_prev, rs, x)
 
     def axpy_phase(self, vecs, scalars, mask=None):
         from repro.kernels import ops

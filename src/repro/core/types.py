@@ -3,15 +3,79 @@
 Every solver in ``repro.core`` returns a :class:`SolveResult` and accepts a
 :class:`SolverConfig`.  All solvers are pure functions built on
 ``jax.lax.while_loop`` so they jit, vmap and shard_map cleanly.
+
+:class:`SolveStatus` is the typed outcome vocabulary of the resilience
+layer (:mod:`repro.resilience`): every solver now reports WHY it stopped
+— converged, out of budget, which denominator broke down, non-finite
+state, deadline — as a small int code that lives happily inside device
+arrays (per-column ``(m,)`` status vectors in the batched/guarded paths)
+and converts to the enum at the host boundary.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+
+class SolveStatus(enum.IntEnum):
+    """Typed outcome of a solve (or of one column of a batched solve).
+
+    Values are stable small ints so statuses can be carried per column in
+    device arrays; ``SolveStatus(int(code))`` recovers the enum host-side.
+    ``RUNNING`` only appears on open-loop state packaged mid-flight.
+
+    Failure taxonomy (``is_failure``): the three ``BREAKDOWN_*`` codes
+    name the specific denominator of the BiCGSafe coefficient formulas
+    that underflowed (guarded paths); ``BREAKDOWN`` is the generic
+    pivot-underflow code of the unguarded single-RHS solvers;
+    ``NONFINITE`` means NaN/Inf was detected in the iteration state;
+    ``STAGNATION`` means the guarded driver gave up on a column whose
+    residual stopped improving; ``DEADLINE`` is service-side wall-clock
+    expiry.
+    """
+
+    RUNNING = 0
+    CONVERGED = 1
+    MAXITER = 2
+    BREAKDOWN = 3        # generic pivot/denominator underflow
+    BREAKDOWN_RHO = 4    # beta denominator zeta_{i-1} * f_{i-1} (rho ratio)
+    BREAKDOWN_ALPHA = 5  # alpha denominator g + beta * h
+    BREAKDOWN_OMEGA = 6  # zeta/eta denominator a*b - c^2 (omega analogue)
+    NONFINITE = 7        # NaN/Inf detected in the iteration state
+    STAGNATION = 8       # residual stopped improving; recovery exhausted
+    DEADLINE = 9         # service wall-clock budget expired
+
+    @property
+    def is_failure(self) -> bool:
+        return self >= SolveStatus.BREAKDOWN
+
+    @property
+    def is_terminal(self) -> bool:
+        return self != SolveStatus.RUNNING
+
+
+def classify_status(converged, breakdown, relres) -> jax.Array:
+    """Coarse device-side status from a solver's final flags.
+
+    Used by the unguarded solvers to fill ``SolveResult.status`` at zero
+    marginal cost (a few scalar selects AFTER the loop): CONVERGED /
+    BREAKDOWN / NONFINITE / MAXITER.  The guarded batched path carries a
+    richer per-column code through the iteration instead
+    (:mod:`repro.core.multirhs` with ``SolverConfig.guard``).
+    """
+    converged = jnp.asarray(converged)
+    s = jnp.where(converged, SolveStatus.CONVERGED.value,
+                  SolveStatus.MAXITER.value)
+    s = jnp.where(jnp.asarray(breakdown) & ~converged,
+                  SolveStatus.BREAKDOWN.value, s)
+    s = jnp.where(~jnp.isfinite(jnp.asarray(relres)) & ~converged,
+                  SolveStatus.NONFINITE.value, s)
+    return s.astype(jnp.int32)
 
 
 class SolveResult(NamedTuple):
@@ -27,6 +91,10 @@ class SolveResult(NamedTuple):
       residual_history: optional (maxiter+1,) array of relative residual
         norms (filled with NaN past ``iterations``) when
         ``SolverConfig.record_history`` is set; otherwise a (0,) array.
+      status: typed outcome — an int32 :class:`SolveStatus` code (scalar,
+        or (m,) per column for batched solves).  Every solver fills it;
+        the default ``None`` only exists so externally constructed
+        results (and the pre-status pickles/tests) stay valid.
     """
 
     x: jax.Array
@@ -35,6 +103,7 @@ class SolveResult(NamedTuple):
     converged: jax.Array
     breakdown: jax.Array
     residual_history: jax.Array
+    status: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +118,24 @@ class SolverConfig:
       rr_epoch: residual-replacement epoch ``m`` (p-BiCGSafe-rr only).
       rr_maxiter: residual-replacement cutoff ``M`` (p-BiCGSafe-rr only).
       breakdown_eps: |denominator| threshold treated as breakdown.
+      guard: carry per-column health scalars through the fused dot phase
+        (batched p-BiCGSafe only).  The (9, m) reduction becomes a
+        (11, m) reduction — same single communication phase, still no
+        dependency edge to the in-flight matvec — and the state gains
+        typed per-column status codes plus drift/stagnation monitors
+        that :class:`repro.resilience.GuardedSolver` reads at chunk
+        boundaries.  Off by default; the unguarded program is bit-for-bit
+        unchanged.
+      stagnation_window: with ``guard``, flag a column as stagnant after
+        this many consecutive iterations without improving its best
+        relative residual (0 disables stagnation detection).
+      drift_scale: with ``guard``, trip the drift monitor when the
+        accumulated Cools/van-der-Vorst–Ye rounding-error bound on the
+        recurred-vs-true residual gap exceeds
+        ``drift_scale * tol * ||r_0||`` — i.e. when the drift could
+        corrupt the *convergence decision* itself, which is when
+        residual replacement pays.  0 → 1.0 (replace once the bound
+        reaches the absolute tolerance).
     """
 
     tol: float = 1e-8
@@ -57,11 +144,18 @@ class SolverConfig:
     rr_epoch: int = 100
     rr_maxiter: int = 10_000
     breakdown_eps: float = 0.0  # 0 → use dtype-scaled default
+    guard: bool = False
+    stagnation_window: int = 0
+    drift_scale: float = 0.0  # 0 → 1.0 (bound reaches the abs tolerance)
 
     def breakdown_threshold(self, dtype) -> float:
         if self.breakdown_eps:
             return self.breakdown_eps
         return float(jnp.finfo(dtype).tiny) * 1e4
+
+    def drift_threshold(self, dtype) -> float:
+        del dtype
+        return self.drift_scale if self.drift_scale else 1.0
 
 
 # A matvec is any callable Array -> Array preserving shape/dtype.

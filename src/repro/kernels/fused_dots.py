@@ -18,6 +18,12 @@ computes 9*m inner products, and the solver still reduces the whole block
 with ONE ``psum``: batching amortizes both the memory traffic and the
 reduction latency across right-hand sides (Krasnopolsky's multi-RHS
 argument applied to the pipelined communication model).
+
+``fused_dots_health_pallas`` / ``fused_dots_health_batched_pallas`` are
+the guarded variants (repro.resilience): two extra health rows — the
+solution-norm dot ``x.x`` and a NaN/Inf finiteness probe — ride along in
+the SAME pass and the SAME single reduction, so breakdown/drift
+detection costs zero additional communication phases.
 """
 from __future__ import annotations
 
@@ -28,7 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANES = 128
-OUT_PAD = 16  # pad 9 -> 16 for clean layout
+OUT_PAD = 16   # pad 9 -> 16 for clean layout
+HEALTH_ROWS = 11  # 9 solver dots + x.x + finiteness probe (still <= OUT_PAD)
 
 
 def _kernel(s_ref, y_ref, r_ref, t_ref, rs_ref, out_ref):
@@ -132,3 +139,114 @@ def fused_dots_batched_pallas(s, y, r, t, rs, *, block_rows: int = 256,
         interpret=interpret,
     )(*args)
     return out[:9, :]
+
+
+def _health_kernel(s_ref, y_ref, r_ref, t_ref, rs_ref, x_ref, out_ref):
+    i = pl.program_id(0)
+    acc = out_ref.dtype
+    s = s_ref[...].astype(acc)
+    y = y_ref[...].astype(acc)
+    r = r_ref[...].astype(acc)
+    t = t_ref[...].astype(acc)
+    rs = rs_ref[...].astype(acc)
+    x = x_ref[...].astype(acc)
+    partial = jnp.stack([
+        jnp.sum(s * s), jnp.sum(y * y), jnp.sum(s * y), jnp.sum(s * r),
+        jnp.sum(y * r), jnp.sum(rs * r), jnp.sum(rs * s), jnp.sum(rs * t),
+        jnp.sum(r * r), jnp.sum(x * x), jnp.sum(s + y + t + rs + x)])
+    partial = jnp.pad(partial, (0, OUT_PAD - HEALTH_ROWS)).reshape(1, OUT_PAD)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_dots_health_pallas(s, y, r, t, rs, x, *, block_rows: int = 256,
+                             interpret: bool = False) -> jax.Array:
+    """Guarded fused dots: 9 solver dots + 2 health rows (x.x, NaN/Inf
+    probe) in one HBM pass — see ``kernels.ref.fused_dots_health`` for
+    the row layout.  Same tiling as ``fused_dots_pallas``; the padded
+    output still fits the (1, 16) tile, so the guarded phase costs one
+    extra VMEM operand and zero extra output traffic."""
+    n = s.shape[0]
+    lane_rows = -(-n // LANES)              # ceil
+    rows = -(-lane_rows // block_rows) * block_rows
+    padded = rows * LANES
+
+    def prep(v):
+        return jnp.pad(v, (0, padded - n)).reshape(rows, LANES)
+
+    args = [prep(v) for v in (s, y, r, t, rs, x)]
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _health_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))] * 6,
+        out_specs=pl.BlockSpec((1, OUT_PAD), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (1, OUT_PAD), jnp.promote_types(s.dtype, jnp.float32)),
+        interpret=interpret,
+    )(*args)
+    return out[0, :HEALTH_ROWS]
+
+
+def _health_batched_kernel(s_ref, y_ref, r_ref, t_ref, rs_ref, x_ref,
+                           out_ref):
+    i = pl.program_id(1)                  # row block within this column
+    acc = out_ref.dtype
+    s = s_ref[...].astype(acc)            # (1, block_rows, LANES)
+    y = y_ref[...].astype(acc)
+    r = r_ref[...].astype(acc)
+    t = t_ref[...].astype(acc)
+    rs = rs_ref[...].astype(acc)
+    x = x_ref[...].astype(acc)
+    partial = jnp.stack([                 # 9 dots + 2 health rows, column j
+        jnp.sum(s * s), jnp.sum(y * y), jnp.sum(s * y), jnp.sum(s * r),
+        jnp.sum(y * r), jnp.sum(rs * r), jnp.sum(rs * s), jnp.sum(rs * t),
+        jnp.sum(r * r), jnp.sum(x * x), jnp.sum(s + y + t + rs + x)])
+    partial = jnp.pad(partial, (0, OUT_PAD - HEALTH_ROWS)).reshape(OUT_PAD, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_dots_health_batched_pallas(s, y, r, t, rs, x, *,
+                                     block_rows: int = 256,
+                                     interpret: bool = False) -> jax.Array:
+    """Multi-RHS guarded dots: (n, m) inputs -> (11, m) partials.
+
+    The m-column analogue of ``fused_dots_health_pallas``: identical
+    (column, row-block) grid and lane layout as the unguarded batched
+    kernel, one extra operand (the previous iterate block ``x``), and the
+    (16, m) padded output carries 11 meaningful rows instead of 9 — the
+    guarded solve still issues exactly ONE reduction per iteration.
+    """
+    n, m = s.shape
+    lane_rows = -(-n // LANES)
+    rows = -(-lane_rows // block_rows) * block_rows
+    padded = rows * LANES
+
+    def prep(v):
+        # (n, m) -> (m, rows, LANES): column-major tiles, rows on lanes
+        return jnp.pad(v.T, ((0, 0), (0, padded - n))).reshape(
+            m, rows, LANES)
+
+    args = [prep(v) for v in (s, y, r, t, rs, x)]
+    vec_spec = pl.BlockSpec((1, block_rows, LANES), lambda j, i: (j, i, 0))
+    out = pl.pallas_call(
+        _health_batched_kernel,
+        grid=(m, rows // block_rows),
+        in_specs=[vec_spec] * 6,
+        out_specs=pl.BlockSpec((OUT_PAD, 1), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (OUT_PAD, m), jnp.promote_types(s.dtype, jnp.float32)),
+        interpret=interpret,
+    )(*args)
+    return out[:HEALTH_ROWS, :]

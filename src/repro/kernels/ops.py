@@ -35,7 +35,9 @@ import numpy as np
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .fused_axpy import fused_axpy_batched_pallas, fused_axpy_pallas
-from .fused_dots import fused_dots_batched_pallas, fused_dots_pallas
+from .fused_dots import (fused_dots_batched_pallas,
+                         fused_dots_health_batched_pallas,
+                         fused_dots_health_pallas, fused_dots_pallas)
 from .precond_apply import (block_jacobi_apply_batched_pallas,
                             block_jacobi_apply_pallas)
 from .spmv_ell import spmv_ell_batched_pallas, spmv_ell_pallas
@@ -55,6 +57,20 @@ def fused_dots(s, y, r, t, rs) -> jax.Array:
         return fused_dots_batched_pallas(s, y, r, t, rs,
                                          interpret=_interpret())
     return fused_dots_pallas(s, y, r, t, rs, interpret=_interpret())
+
+
+def fused_dots_health(s, y, r, t, rs, x) -> jax.Array:
+    """Guarded fused dots: the 9 solver dots plus 2 in-reduction health
+    rows (``x.x`` and a NaN/Inf probe) — see ``ref.fused_dots_health``.
+
+    1-D ``(n,)`` inputs -> ``(11,)``; 2-D ``(n, m)`` blocks -> ``(11, m)``.
+    Same single-pass/single-reduction contract as :func:`fused_dots`.
+    """
+    if s.ndim == 2:
+        return fused_dots_health_batched_pallas(s, y, r, t, rs, x,
+                                                interpret=_interpret())
+    return fused_dots_health_pallas(s, y, r, t, rs, x,
+                                    interpret=_interpret())
 
 
 def spmv_ell(op, x) -> jax.Array:

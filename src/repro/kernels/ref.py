@@ -28,6 +28,36 @@ def fused_dots_batched(s, y, r, t, rs) -> jax.Array:
         jnp.sum(r * r, axis=0, dtype=f32)])
 
 
+def fused_dots_health(s, y, r, t, rs, x) -> jax.Array:
+    """Guarded fused dots: the 9 rows of :func:`fused_dots` plus two
+    health rows, all in the SAME single reduction phase (11 rows total):
+
+      row  9: ``x . x``        — solution-norm estimate feeding the
+              recurrence-vs-true residual drift bound (Cools criterion);
+      row 10: ``sum(s+y+t+rs+x)`` — finiteness probe: NaN/Inf anywhere in
+              the operands poisons the sum (``r``'s finiteness is already
+              visible through row 8, ``r . r``).
+
+    ``x`` is the PREVIOUS iterate — a loop-carried value, so reading it
+    here adds no dependency edge to the in-flight matvec ``A s``.
+    """
+    f32 = jnp.promote_types(s.dtype, jnp.float32)
+    return jnp.concatenate([
+        fused_dots(s, y, r, t, rs),
+        jnp.stack([jnp.sum(x * x, dtype=f32),
+                   jnp.sum(s + y + t + rs + x, dtype=f32)])])
+
+
+def fused_dots_health_batched(s, y, r, t, rs, x) -> jax.Array:
+    """Multi-RHS guarded dots: (n, m) inputs -> (11, m) per-column rows
+    (see :func:`fused_dots_health` for the row layout)."""
+    f32 = jnp.promote_types(s.dtype, jnp.float32)
+    return jnp.concatenate([
+        fused_dots_batched(s, y, r, t, rs),
+        jnp.stack([jnp.sum(x * x, axis=0, dtype=f32),
+                   jnp.sum(s + y + t + rs + x, axis=0, dtype=f32)])])
+
+
 def spmv_ell(values, cols, x) -> jax.Array:
     """ELLPACK SpMV: y[i] = sum_j values[i,j] * x[cols[i,j]].
 

@@ -1,0 +1,47 @@
+"""repro.resilience — guarded solves: detection, recovery, injection.
+
+Three layers, one per module:
+
+* **Detection** rides *inside* the solver's single synchronization
+  phase: with ``SolverConfig.guard`` the fused (9, m) dot phase of the
+  batched p-BiCGSafe iteration becomes an (11, m) phase whose two extra
+  rows carry ``||x||^2`` and a NaN/Inf probe over the reduction operands
+  — zero additional reductions, and still no dependency edge to the
+  in-flight matvec (the paper's comm-hiding overlap is intact;
+  jaxpr-asserted in tests/test_resilience.py).  The state gains typed
+  per-column :class:`~repro.core.SolveStatus` codes, the Cools /
+  van-der-Vorst–Ye drift bound, and a stagnation monitor
+  (:mod:`repro.core.multirhs`).
+* **Recovery** is host-side and declarative: a frozen
+  :class:`RecoveryPolicy` tells the :class:`GuardedSolver` driver what
+  it may do at chunk boundaries — on-trigger residual replacement
+  (generalizing p-BiCGSafe-rr's fixed cadence), restart-from-current-x,
+  p-bicgsafe -> bicgstab method fallback, pallas -> jnp substrate
+  degradation (:mod:`repro.resilience.policy`, ``.guard``,
+  ``.recover``).
+* **Injection** (:mod:`repro.resilience.inject`) drives deterministic
+  chaos: NaN insertion, near-singular operators, simulated kernel
+  failures, virtual-clock deadline pressure — the harness behind
+  tests/test_resilience.py and benchmarks/bench_robustness.py.
+
+Front door: ``repro.make_solver(..., recovery=RecoveryPolicy(...))``.
+The service layer (:mod:`repro.service`) consumes the same machinery
+for per-request typed statuses, NaN scrubbing of the resident block,
+and capped-backoff retries.
+"""
+from repro.core.types import SolveStatus
+
+from .guard import GuardedSolver, guarded_config
+from .inject import (ChunkFaultInjector, SimulatedKernelFailure,
+                     TickingClock, corrupt_engine_block, nan_columns,
+                     near_singular_dense, orthogonal_shadow)
+from .policy import RecoveryPolicy
+from .recover import replace_columns, restart_columns
+
+__all__ = [
+    "SolveStatus", "RecoveryPolicy", "GuardedSolver", "guarded_config",
+    "replace_columns", "restart_columns",
+    "ChunkFaultInjector", "SimulatedKernelFailure", "TickingClock",
+    "corrupt_engine_block", "nan_columns", "near_singular_dense",
+    "orthogonal_shadow",
+]

@@ -1,0 +1,161 @@
+"""Fault-injection harness for chaos-testing guarded solves.
+
+Deterministic, host-controlled faults for tests and
+``benchmarks/bench_robustness.py``:
+
+* :class:`ChunkFaultInjector` — the GuardedSolver's test hook: NaN
+  insertion into chosen columns of the live state, and simulated
+  kernel-level failures, fired at chosen chunk boundaries (exact,
+  repeatable — no randomness on the device path).
+* :func:`nan_columns` — poison chosen columns of a state field.
+* :func:`near_singular_dense` — a Dense operator with a controlled
+  smallest singular value (drives genuine numerical breakdowns).
+* :func:`orthogonal_shadow` — a shadow residual r0* orthogonal to r0
+  (zero initial rho: the classic BREAKDOWN_RHO scenario).
+* :class:`TickingClock` — virtual monotonic clock for deadline-pressure
+  tests against :mod:`repro.service` without wall-clock sleeps.
+* :func:`corrupt_engine_block` — poke NaN into columns of a service
+  engine's resident block, mid-flight.
+
+Injection here simulates the *effects* of real faults (memory
+corruption surfacing as NaN, a kernel launch failure surfacing as an
+exception) at the state level, so the recovery machinery — not the
+fault transport — is what gets exercised.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class SimulatedKernelFailure(RuntimeError):
+    """Stand-in for a kernel-level launch/execution failure.
+
+    Raised by :class:`ChunkFaultInjector` before a chosen chunk; the
+    GuardedSolver's substrate-degradation path treats it exactly like a
+    real Pallas failure (rebuild on ``"jnp"``, continue from the same
+    state).
+    """
+
+
+def nan_columns(state: dict, cols: Sequence[int],
+                field: str = "r") -> dict:
+    """Return ``state`` with NaN written into ``cols`` of ``field``.
+
+    The canonical corruption model: a poisoned residual column.  The
+    guarded (11, m) reduction's finiteness probe detects it on the next
+    iteration without any extra synchronization.
+    """
+    arr = state[field]
+    mask = np.zeros((arr.shape[-1],), bool)
+    mask[list(cols)] = True
+    out = dict(state)
+    out[field] = jnp.where(jnp.asarray(mask)[None, :], jnp.nan, arr)
+    return out
+
+
+class ChunkFaultInjector:
+    """Deterministic fault schedule over a guarded solve's chunk loop.
+
+    Args:
+      nan_at: ``{chunk_index: columns}`` — before that chunk runs, NaN is
+        written into those columns of ``field``.
+      fail_at: chunk indices at which a :class:`SimulatedKernelFailure`
+        is raised (once each — the retried chunk proceeds).
+      field: state field to poison (default the residual ``"r"``).
+
+    Instances are callables ``(chunk_index, state) -> state`` — the
+    signature of ``GuardedSolver``'s ``inject`` hook.
+    """
+
+    def __init__(self, nan_at: Optional[Dict[int, Sequence[int]]] = None,
+                 fail_at: Iterable[int] = (), field: str = "r"):
+        self.nan_at = {int(k): tuple(v) for k, v in (nan_at or {}).items()}
+        self.fail_at = set(int(k) for k in fail_at)
+        self.field = field
+        self.fired: list = []
+
+    def __call__(self, chunk_index: int, state: dict) -> dict:
+        if chunk_index in self.fail_at:
+            self.fail_at.discard(chunk_index)
+            self.fired.append(("kernel_failure", chunk_index))
+            raise SimulatedKernelFailure(
+                f"injected kernel failure at chunk {chunk_index}")
+        cols = self.nan_at.pop(chunk_index, None)
+        if cols:
+            self.fired.append(("nan", chunk_index, cols))
+            state = nan_columns(state, cols, self.field)
+        return state
+
+
+def near_singular_dense(n: int, *, sigma_min: float = 1e-14,
+                        seed: int = 0, dtype=jnp.float64):
+    """A DenseOperator whose smallest singular value is ``sigma_min``.
+
+    Built from a seeded random orthogonal pair U diag(s) V^T with a
+    well-spread spectrum [1, 2] except for one tiny singular value —
+    conditioning bad enough to drive coefficient denominators under any
+    realistic ``breakdown_eps`` while keeping the operator finite.
+    """
+    from repro.core import DenseOperator
+    rng = np.random.default_rng(seed)
+    q1, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    q2, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.linspace(1.0, 2.0, n)
+    s[0] = sigma_min
+    a = (q1 * s) @ q2.T
+    return DenseOperator(jnp.asarray(a, dtype=dtype))
+
+
+def orthogonal_shadow(r0) -> jnp.ndarray:
+    """A shadow residual r0* exactly* orthogonal to ``r0`` (*up to
+    round-off — pair with an explicit ``breakdown_eps`` like 1e-12).
+
+    Zero initial ``rho = (r0*, r0)`` makes the very first beta/alpha
+    denominators degenerate: the canonical typed-BREAKDOWN_RHO scenario.
+    """
+    r0 = jnp.asarray(r0)
+    v = jnp.ones_like(r0)
+    proj = jnp.vdot(r0, v) / jnp.vdot(r0, r0)
+    shadow = v - proj * r0
+    # degenerate case (r0 parallel to ones): pick a coordinate swap
+    alt = jnp.zeros_like(r0).at[0].set(1.0).at[1].add(-1.0)
+    use_alt = jnp.sqrt(jnp.vdot(shadow, shadow)) == 0
+    return jnp.where(use_alt, alt, shadow)
+
+
+class TickingClock:
+    """Virtual monotonic clock: advances ``dt`` per call.
+
+    Inject as ``SolveEngine(..., clock=TickingClock(dt))`` to create
+    deterministic deadline pressure — every engine clock read (submit,
+    admission, retirement) advances time, no sleeps involved.
+    """
+
+    def __init__(self, dt: float = 0.0, t0: float = 0.0):
+        self.t = float(t0)
+        self.dt = float(dt)
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+    def advance(self, seconds: float) -> None:
+        self.t += float(seconds)
+
+
+def corrupt_engine_block(engine, operator: str,
+                         cols: Sequence[int], field: str = "r") -> None:
+    """Poison columns of a service engine's resident block, in place.
+
+    Simulates mid-flight memory corruption inside the serving layer; the
+    engine's next chunk must surface NONFINITE for the affected requests
+    and scrub the column before reusing the slot (chaos tests in
+    tests/test_resilience.py).
+    """
+    blk = engine._blocks.get(engine.registry[operator].name)
+    if blk is None or blk.state is None:
+        raise ValueError(f"operator {operator!r} has no resident block")
+    blk.state = nan_columns(blk.state, cols, field)

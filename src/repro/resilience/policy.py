@@ -1,0 +1,94 @@
+"""Declarative recovery policies for guarded solves.
+
+A :class:`RecoveryPolicy` is a frozen, hashable description of *what the
+host is allowed to do* when the in-reduction health rows of a guarded
+solve (``SolverConfig.guard``; see :mod:`repro.core.multirhs`) flag a
+column at a chunk boundary:
+
+* **replace** — on-trigger residual replacement: recompute ``r = b - A x``
+  and the recurred A-images from true matvecs when the Cools /
+  van-der-Vorst–Ye drift bound trips (the generalization of
+  p-BiCGSafe-rr's fixed ``rr_epoch`` cadence — the trigger is the
+  in-flight drift estimate, not a counter).
+* **restart** — re-seed the Krylov space from the current iterate after a
+  typed breakdown (``BREAKDOWN_RHO`` / ``_ALPHA`` / ``_OMEGA``), a
+  non-finite state, or stagnation: keep x, take a fresh ``r0 = b - A x``
+  and shadow residual, zero the auxiliary vectors.
+* **method fallback** — columns that exhaust restarts fall back to a
+  non-pipelined method (default BiCGStab) whose shorter recurrences
+  tolerate the breakdown mode.
+* **substrate degradation** — a kernel-level failure on the pallas
+  substrate rebuilds the step program on the jnp substrate and continues
+  from the same state pytree (it is substrate-independent by design).
+* **service retries** — the engine re-enqueues failed requests with a
+  capped exponential backoff (:mod:`repro.service`).
+
+The policy itself holds no state; :class:`repro.resilience.GuardedSolver`
+interprets it, and every action it takes is appended to the solver's
+``events`` log.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """What a guarded solve may do about an unhealthy column.
+
+    Attributes:
+      max_restarts: per-column budget of restart-from-current-x events
+        (breakdown / non-finite / stagnation responses).  0 disables
+        restarts — a broken column goes straight to method fallback (if
+        enabled) or is surfaced with its typed status.
+      max_replacements: per-column budget of on-trigger residual
+        replacements (drift-flag responses).  0 disables replacement.
+      stagnation_window: consecutive non-improving iterations before a
+        column is flagged stagnant (forwarded into
+        ``SolverConfig.stagnation_window``; 0 disables the monitor).
+      drift_scale: drift threshold multiplier (forwarded into
+        ``SolverConfig.drift_scale``; 0 means ``sqrt(eps)`` of the
+        dtype).
+      method_fallback: method name from :data:`repro.core.SOLVERS` run on
+        columns that are still broken after all restarts (``None``
+        disables the fallback).
+      substrate_fallback: rebuild the step program on the ``"jnp"``
+        substrate and continue from the same state after a kernel-level
+        failure on ``"pallas"``.
+      chunk: iterations between host health checks.  Larger chunks
+        amortize the device->host flag read; smaller chunks bound how
+        long a broken column burns before the policy reacts.
+      max_retries: service layer only — times the engine re-enqueues a
+        failed (broken-down / non-finite, not converged, not past
+        deadline) request before surfacing the typed failure.
+      retry_backoff_s: base delay before a retry becomes eligible
+        (doubled per attempt).  The default 0.0 retries at the next
+        admission opportunity — appropriate for the virtual-clock tests
+        and for faults that are not load-correlated.
+      retry_backoff_cap_s: upper bound on the per-retry delay.
+    """
+
+    max_restarts: int = 2
+    max_replacements: int = 4
+    stagnation_window: int = 0
+    drift_scale: float = 0.0
+    method_fallback: Optional[str] = "bicgstab"
+    substrate_fallback: bool = True
+    chunk: int = 64
+    max_retries: int = 1
+    retry_backoff_s: float = 0.0
+    retry_backoff_cap_s: float = 1.0
+
+    def __post_init__(self):
+        if self.method_fallback is not None:
+            from repro.core import SOLVERS
+            if self.method_fallback not in SOLVERS:
+                raise ValueError(
+                    f"unknown method_fallback {self.method_fallback!r}; "
+                    f"expected one of {sorted(SOLVERS)} or None")
+        if self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        for name in ("max_restarts", "max_replacements", "max_retries"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")

@@ -32,6 +32,17 @@ overlap (Cools & Vanroose, arXiv:1612.01395) is intact under load
 
 Throughput/latency against sequential and static-batch serving:
 ``benchmarks/bench_service.py``.
+
+Resilience (``ServiceConfig.recovery``; see :mod:`repro.resilience`):
+with a :class:`~repro.resilience.RecoveryPolicy` bound, the resident
+blocks step guarded — the fused reduction carries the (11, m) health
+rows, so breakdown/NaN detection costs zero extra synchronization —
+and every retirement carries a typed :class:`~repro.core.SolveStatus`.
+Columns that went non-finite are scrubbed (freeze-spliced) before their
+slot is reused, and failed requests are re-enqueued with capped
+exponential backoff up to ``recovery.max_retries`` times (stable rid
+across retries).  Fault-injection chaos tests:
+tests/test_resilience.py via :mod:`repro.resilience.inject`.
 """
 from __future__ import annotations
 
@@ -43,6 +54,8 @@ from typing import Deque, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.types import SolveStatus
 
 from .registry import OperatorRegistry, RegisteredOperator
 from .types import (RequestResult, RequestTelemetry, ServiceConfig,
@@ -154,8 +167,9 @@ class SolveEngine:
                       ) -> Optional[SolveRequest]:
         """Pop the next serviceable request; requests whose deadline
         elapsed while queued are retired immediately (never occupy a
-        slot)."""
-        while q:
+        slot), and retried requests still inside their backoff window
+        (``not_before``) rotate to the back of the queue."""
+        for _ in range(len(q)):
             req = q.popleft()
             if req.deadline is not None and \
                     self._clock() - req.t_submit > req.deadline:
@@ -168,7 +182,11 @@ class SolveEngine:
                     telemetry=RequestTelemetry(
                         queue_wait_s=now - req.t_submit, service_s=0.0,
                         wall_s=now - req.t_submit, chunks_resident=0,
-                        deadline_exceeded=True)))
+                        deadline_exceeded=True),
+                    status=SolveStatus.DEADLINE, retries=req.retries))
+                continue
+            if req.not_before and self._clock() < req.not_before:
+                q.append(req)            # backing off: not eligible yet
                 continue
             return req
         return None
@@ -246,11 +264,18 @@ class SolveEngine:
                 req.chunks_resident += 1
 
         # 3) retire finished / deadline-blown columns (ONE host transfer
-        # for the five (m,) flag vectors)
+        # for the (m,) flag vectors — plus the typed status vector when
+        # the block is guarded)
         st = blk.state
-        conv, brk, iters, relres, budget = jax.device_get(
-            (st["converged"], st["breakdown"], st["iterations"],
-             st["relres"], st["col_maxiter"]))
+        guarded = "status" in st
+        flags = [st["converged"], st["breakdown"], st["iterations"],
+                 st["relres"], st["col_maxiter"]]
+        if guarded:
+            flags.append(st["status"])
+        got = jax.device_get(tuple(flags))
+        conv, brk, iters, relres, budget = got[:5]
+        status_arr = got[5] if guarded else None
+        recovery = self.scfg.recovery
         results: List[RequestResult] = []
         x_host = None
         now = self._clock()
@@ -262,21 +287,61 @@ class SolveEngine:
                     and now - req.t_submit > req.deadline)
             if not (finished or late):
                 continue
+            # typed retirement status: the guarded block carries the
+            # in-reduction per-column code; unguarded blocks get the
+            # coarse classification — DEADLINE trumps either
+            if guarded and finished \
+                    and int(status_arr[j]) != SolveStatus.RUNNING.value:
+                sts = SolveStatus(int(status_arr[j]))
+            elif conv[j]:
+                sts = SolveStatus.CONVERGED
+            elif brk[j]:
+                sts = SolveStatus.BREAKDOWN
+            else:
+                sts = SolveStatus.MAXITER
+            if late and not finished:
+                sts = SolveStatus.DEADLINE
+            poisoned = sts == SolveStatus.NONFINITE \
+                or not np.isfinite(relres[j])
+            blk.slots[j] = None
+            if late and not finished:
+                blk.orphans.add(j)       # still iterating: freeze later
+            if poisoned:
+                blk.orphans.add(j)       # scrub before the slot is reused
+            # failed requests re-enqueue with capped exponential backoff
+            # (stable rid); no result is emitted for this attempt
+            if recovery is not None and sts.is_failure \
+                    and sts != SolveStatus.DEADLINE \
+                    and req.retries < recovery.max_retries and not late:
+                req.retries += 1
+                back = 0.0
+                if recovery.retry_backoff_s:
+                    back = min(
+                        recovery.retry_backoff_s * 2 ** (req.retries - 1),
+                        recovery.retry_backoff_cap_s)
+                req.not_before = now + back
+                q.append(req)
+                continue
             if x_host is None:
                 x_host = np.asarray(st["x"])
+            xj = x_host[:, j].copy()
+            if not np.isfinite(xj).all():
+                # finite-output guarantee: a poisoned column never hands
+                # NaN back to the caller (the typed status says why)
+                xj = np.where(np.isfinite(xj), xj, 0.0)
+            rr_j = float(relres[j])
             results.append(RequestResult(
-                rid=req.rid, operator=name, x=x_host[:, j].copy(),
-                iterations=int(iters[j]), relres=float(relres[j]),
+                rid=req.rid, operator=name, x=xj,
+                iterations=int(iters[j]),
+                relres=rr_j if np.isfinite(rr_j) else float("inf"),
                 converged=bool(conv[j]), breakdown=bool(brk[j]),
                 telemetry=RequestTelemetry(
                     queue_wait_s=req.t_start - req.t_submit,
                     service_s=now - req.t_start,
                     wall_s=now - req.t_submit,
                     chunks_resident=req.chunks_resident,
-                    deadline_exceeded=bool(late and not finished))))
-            blk.slots[j] = None
-            if late and not finished:
-                blk.orphans.add(j)       # still iterating: freeze later
+                    deadline_exceeded=bool(late and not finished)),
+                status=sts, retries=req.retries))
 
         # 4) drop a drained block (frozen orphans die with it)
         if not blk.live() and not q:

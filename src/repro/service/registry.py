@@ -94,9 +94,16 @@ class OperatorRegistry:
 
     def _make_session(self, op, precond: PrecondLike) -> LinearSolver:
         scfg = self._scfg
+        cfg = SolverConfig(tol=scfg.tol, maxiter=scfg.maxiter)
+        if scfg.recovery is not None:
+            # guarded serving: the open-loop programs step with the
+            # (11, m) health reduction and carry typed per-column
+            # statuses the engine reads at chunk boundaries
+            from repro.resilience.guard import guarded_config
+            cfg = guarded_config(cfg, scfg.recovery)
         return make_solver(
             "p-bicgsafe", op, precond=precond, substrate=scfg.substrate,
-            config=SolverConfig(tol=scfg.tol, maxiter=scfg.maxiter))
+            config=cfg)
 
     def register(self, op, precond: PrecondLike = None,
                  name: Optional[str] = None) -> str:

@@ -15,6 +15,9 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.core.types import SolveStatus
+from repro.resilience.policy import RecoveryPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
@@ -36,6 +39,15 @@ class ServiceConfig:
       tol / maxiter: per-request defaults when the request leaves them
         unset (``maxiter`` is also the hard per-column budget the step
         program enforces on device).
+      recovery: ``None`` runs the engine exactly as before.  A
+        :class:`repro.resilience.RecoveryPolicy` turns on guarded
+        serving: the resident blocks step with ``SolverConfig.guard``
+        (the (11, m) in-reduction health rows — same single reduction
+        per iteration), broken columns retire with their typed
+        :class:`~repro.core.SolveStatus`, non-finite columns are
+        scrubbed before their slot is reused, and failed requests are
+        re-enqueued up to ``recovery.max_retries`` times with capped
+        exponential backoff.
     """
 
     max_batch: int = 8
@@ -43,6 +55,7 @@ class ServiceConfig:
     substrate: Any = "jnp"
     tol: float = 1e-8
     maxiter: int = 10_000
+    recovery: Optional[RecoveryPolicy] = None
 
 
 @dataclasses.dataclass
@@ -69,6 +82,12 @@ class SolveRequest:
     t_submit: float = 0.0
     t_start: Optional[float] = None
     chunks_resident: int = 0
+    #: retry attempts consumed so far (guarded serving; see
+    #: ``ServiceConfig.recovery``) — the rid is stable across retries
+    retries: int = 0
+    #: earliest clock time this request may next occupy a slot (retry
+    #: backoff; 0.0 = immediately eligible)
+    not_before: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +104,16 @@ class RequestTelemetry:
 @dataclasses.dataclass(frozen=True)
 class RequestResult:
     """Per-request outcome: the solver fields a standalone
-    ``solve_batched`` column would report, plus telemetry."""
+    ``solve_batched`` column would report, plus telemetry.
+
+    ``status`` is the typed :class:`~repro.core.SolveStatus` of the
+    retirement: always filled (guarded serving reports the in-reduction
+    per-column code — which BiCGSafe denominator broke, NONFINITE, … —
+    unguarded serving the coarse classification; deadline expiry is
+    ``DEADLINE`` either way).  ``retries`` counts how many times the
+    engine re-ran the request before this outcome (0 without a recovery
+    policy).
+    """
 
     rid: int
     operator: str
@@ -95,3 +123,5 @@ class RequestResult:
     converged: bool
     breakdown: bool
     telemetry: RequestTelemetry
+    status: SolveStatus = SolveStatus.CONVERGED
+    retries: int = 0

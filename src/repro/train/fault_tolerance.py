@@ -18,6 +18,13 @@ Mechanisms (each unit-tested in tests/test_fault_tolerance.py):
   multihost_utils); in-process we surface the hook + stats.  Synchronous
   SPMD means in-step work cannot be rebalanced, so detection + eviction +
   elastic restart IS the mitigation at this layer.
+
+The same philosophy applied to the solver substrate itself — in-band
+detection (the guarded (11, m) fused reduction), typed failure codes,
+and policy-driven recovery (restart / residual replacement / substrate
+degradation / method fallback) — lives in :mod:`repro.resilience`; the
+solve service wires it to serving traffic (``ServiceConfig.recovery``,
+:mod:`repro.service.engine`).
 """
 from __future__ import annotations
 

@@ -154,6 +154,70 @@ def check_precond_numeric(mesh_shape, axis_names, op, b_grid, xt):
           f"plain {int(plain.iterations)}, err={err:.1e}")
 
 
+def check_guarded_structure(op, b):
+    """Guarded + sharded: the health rows widen the fused block from
+    (9, m) to (11, m) but the communication structure is untouched —
+    EXACTLY ONE psum per iteration, halo ppermutes present, and the
+    reduction's transitive inputs contain NO ppermute (the in-reduction
+    breakdown detection costs zero extra synchronizations even across
+    8 devices)."""
+    m = 3
+    B_grid = jnp.stack([b * (j + 1) for j in range(m)],
+                       axis=1).reshape(op.nx, op.ny, op.nz, m)
+    mesh = jax.make_mesh((8,), ("rows",))
+    cfg = SolverConfig(maxiter=10, guard=True)
+    jaxpr = jax.make_jaxpr(lambda BB: distributed_stencil_solve_batched(
+        op, BB, mesh, config=cfg, jit=False))(B_grid)
+    body = _find_while_body(jaxpr.jaxpr)
+    assert body is not None, "no while loop found"
+
+    psums = [e for e in body.eqns if e.primitive.name == "psum"]
+    assert len(psums) == 1, f"want ONE psum/iter, got {len(psums)}"
+    psum_eqn = psums[0]
+    assert psum_eqn.invars[0].aval.shape == (11, m), \
+        psum_eqn.invars[0].aval.shape
+
+    permute_outs, needs = _eqn_needs_ppermute(body, psum_eqn)
+    assert permute_outs, "no halo ppermutes in the loop body"
+    assert not needs, \
+        "the guarded (11, m) reduction transitively consumes the halo " \
+        "exchange"
+    print(f"  ok guarded structure: 1 psum/iter of (11, {m}), "
+          f"{len(permute_outs)} halo ppermute outputs, no edge to psum")
+
+
+def check_guarded_numeric(op, b):
+    """Guarded sharded solve == unguarded sharded solve (same iteration
+    counts, iterates equal to fusion round-off): the health rows
+    observe, never steer."""
+    m = 2
+    B = jnp.stack([b, 0.5 * b], axis=1)
+    B_grid = B.reshape(op.nx, op.ny, op.nz, m)
+    mesh = jax.make_mesh((8,), ("rows",))
+    plain = distributed_stencil_solve_batched(
+        op, B_grid, mesh, config=SolverConfig(tol=1e-8, maxiter=2000))
+    guard = distributed_stencil_solve_batched(
+        op, B_grid, mesh,
+        config=SolverConfig(tol=1e-8, maxiter=2000, guard=True))
+    assert bool(np.asarray(guard.converged).all())
+    np.testing.assert_allclose(np.asarray(guard.x), np.asarray(plain.x),
+                               rtol=1e-12, atol=1e-13)
+    assert np.array_equal(np.asarray(guard.iterations),
+                          np.asarray(plain.iterations))
+    print("  ok guarded numeric: sharded guarded == unguarded, "
+          f"iters={np.asarray(guard.iterations)}")
+
+
+def guarded_smoke():
+    """CI/pytest smoke entry (``python tests/_distributed_check.py
+    guarded``): sharded guarded structure + parity assertions."""
+    assert jax.device_count() == 8, jax.device_count()
+    op, b, _ = M.convection_diffusion(16, peclet=1.0)
+    check_guarded_structure(op, b)
+    check_guarded_numeric(op, b)
+    print("GUARDED DISTRIBUTED SMOKE PASSED")
+
+
 def precond_smoke():
     """CI smoke entry (``python tests/_distributed_check.py precond``):
     block-Jacobi-enabled distributed solve with the psum-count assertion."""
@@ -197,5 +261,7 @@ def main():
 if __name__ == "__main__":
     if "precond" in sys.argv[1:]:
         precond_smoke()
+    elif "guarded" in sys.argv[1:]:
+        guarded_smoke()
     else:
         main()

@@ -13,11 +13,14 @@ PUBLIC_API = [
     "DenseOperator",
     "DistributedSolver",
     "ELLOperator",
+    "GuardedSolver",
     "LinearSolver",
     "Preconditioner",
+    "RecoveryPolicy",
     "SOLVERS",
     "SUBSTRATES",
     "SolveResult",
+    "SolveStatus",
     "SolverConfig",
     "Stencil7Operator",
     "get_substrate",
@@ -28,7 +31,7 @@ PUBLIC_API = [
 
 # submodules that legitimately appear as attributes after import
 # (importing repro.api pulls these in); NOT part of the call surface
-_SUBMODULES = {"api", "core", "precond", "kernels"}
+_SUBMODULES = {"api", "core", "precond", "kernels", "resilience"}
 
 
 def test_all_matches_snapshot():

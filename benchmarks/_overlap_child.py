@@ -1,12 +1,15 @@
 """Child process for bench_overlap: lowers the distributed solvers on an
 8-device mesh and reports collective/matvec dependency structure as JSON.
+
+Thin consumer of :func:`repro.analysis.hlo.overlap_report` — the HLO
+backend of the contract analyzer owns the dependency analysis; this
+child only builds the compiled texts on the fake 8-device mesh.
 """
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import json  # noqa: E402
-import sys  # noqa: E402
 
 import jax  # noqa: E402
 
@@ -14,48 +17,19 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
+from repro.analysis.hlo import overlap_report  # noqa: E402
 from repro.core import (SolverConfig, pbicgsafe_solve,  # noqa: E402
                         ssbicgsafe2_solve)
 from repro.core import matrices as M  # noqa: E402
 from repro.core.distributed import (distributed_stencil_solve,  # noqa: E402
                                     distributed_stencil_solve_batched)
-from repro.launch.hlo_analysis import (HloGraph,  # noqa: E402
-                                       split_computations)
-
-
-def _analyze_text(text):
-    comps = split_computations(text)
-    # the solver body is the computation holding the fused-dots all-reduce
-    best = None
-    for name, body in comps.items():
-        g = HloGraph(body)
-        ars = [n for n in g.find("all-reduce")
-               if "9" in _result_dims(body, n)]
-        cps = g.find("collective-permute")
-        if ars and cps:
-            best = (name, g, ars, cps)
-            break
-    if best is None:
-        return {"error": "no body with all-reduce(9) + collective-permute"}
-    name, g, ars, cps = best
-    ar = ars[0]
-    indep = [cp for cp in cps if g.independent(ar, cp)]
-    dep_on_ar = [cp for cp in cps if g.depends_on(cp, ar)]
-    ar_dep_on = [cp for cp in cps if g.depends_on(ar, cp)]
-    return {
-        "computation": name,
-        "n_halo_permutes": len(cps),
-        "independent_of_reduction": len(indep),
-        "permutes_needing_reduction": len(dep_on_ar),
-        "reduction_needs_permutes": len(ar_dep_on),
-    }
 
 
 def analyze(solver, op, b_grid, mesh, precond=None):
     fn = jax.jit(lambda b: distributed_stencil_solve(
         solver, op, b, mesh, config=SolverConfig(maxiter=100),
         precond=precond, jit=False))
-    return _analyze_text(fn.lower(b_grid).compile().as_text())
+    return overlap_report(fn.lower(b_grid).compile().as_text())
 
 
 def analyze_batched(op, B_grid, mesh):
@@ -64,7 +38,7 @@ def analyze_batched(op, B_grid, mesh):
     batching the reduction must not serialize it behind the SpMV."""
     fn = jax.jit(lambda B: distributed_stencil_solve_batched(
         op, B, mesh, config=SolverConfig(maxiter=100), jit=False))
-    return _analyze_text(fn.lower(B_grid).compile().as_text())
+    return overlap_report(fn.lower(B_grid).compile().as_text())
 
 
 def main():
@@ -88,15 +62,6 @@ def main():
                                            mesh, precond="block_jacobi"),
     }
     print(json.dumps(out))
-
-
-def _result_dims(body_text: str, opname: str) -> str:
-    for line in body_text.splitlines():
-        s = line.strip()
-        if s.startswith(f"%{opname} =") or s.startswith(f"{opname} =") or \
-                s.startswith(f"ROOT %{opname} =") or s.startswith(f"ROOT {opname} ="):
-            return s.split("=", 1)[1][:80]
-    return ""
 
 
 if __name__ == "__main__":

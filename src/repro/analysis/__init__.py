@@ -1,0 +1,63 @@
+"""repro.analysis — the static contract-verifier for the paper's invariants.
+
+The paper's value proposition is *structural*: one fused inner-product
+phase per iteration, with no dependency edge from that reduction to the
+in-flight matvec, so communication hides behind computation — and
+pipelined recurrences only stay trustworthy if dtype discipline holds.
+This package formalizes those invariants as named, composable **contract
+passes** over traced jaxprs (with an HLO backend for post-compiler
+re-proof) and is the single source of truth every probe site consumes:
+the structural tests, the overlap benchmark, the session hook
+(:meth:`repro.api.LinearSolver.verify_contracts`), and the CI audit.
+
+    from repro.analysis import trace_binding, run_passes
+
+    tb = trace_binding("p-bicgsafe", op, binding="batched",
+                       substrate="pallas", guard=True)
+    report = run_passes(tb)
+    assert report.ok, report.violations
+
+    # or sweep the whole binding matrix (what CI runs):
+    #   python -m repro.analysis audit [--quick]
+
+Layout:
+
+* :mod:`jaxpr_tools` — the ONE jaxpr-walking toolbox (formerly
+  triplicated across test/bench probe files).
+* :mod:`trace`       — trace any session binding (single / batched /
+  open-loop service chunk / mesh) into a ``TracedBinding``; tracing
+  only, zero solver executions.
+* :mod:`passes`      — the contract passes + registry:
+  ``one_reduction_per_iteration``, ``overlap_edge_free``,
+  ``single_psum_sharded``, ``kernel_backed``, ``dtype_flow``.
+* :mod:`report`      — typed ``Finding`` / ``ContractReport`` with jaxpr
+  provenance, plus the human-readable contract table.
+* :mod:`hlo`         — the HLO text backend (absorbed
+  ``repro.launch.hlo_analysis``): collective stats, ``HloGraph``,
+  ``overlap_report``.
+* :mod:`audit`       — the full binding-matrix sweep behind
+  ``python -m repro.analysis audit``; emits
+  ``experiments/contract_audit.json``.
+"""
+from .jaxpr_tools import (count_prim, eqn_needs_ppermute, find_prim_eqn,
+                          find_prim_eqns, find_while_body, nonliteral,
+                          subjaxprs, transitive_inputs)
+from .passes import PASSES, contract_pass, reduction_consumes_matvec, \
+    run_passes
+from .report import (BindingSpec, ContractReport, Finding, format_table)
+from .trace import (REDUCE_MARK_DIM, TracedBinding, tag_matvec, tag_reduce,
+                    trace_binding, trace_fn)
+
+__all__ = [
+    # toolbox
+    "subjaxprs", "find_while_body", "count_prim", "find_prim_eqn",
+    "find_prim_eqns", "nonliteral", "transitive_inputs",
+    "eqn_needs_ppermute",
+    # tracing
+    "TracedBinding", "trace_binding", "trace_fn", "tag_reduce",
+    "tag_matvec", "REDUCE_MARK_DIM",
+    # passes
+    "PASSES", "contract_pass", "run_passes", "reduction_consumes_matvec",
+    # reports
+    "BindingSpec", "ContractReport", "Finding", "format_table",
+]

@@ -1,0 +1,69 @@
+"""``python -m repro.analysis audit`` — the contract audit CLI.
+
+Sweeps the full binding matrix through the contract passes (tracing
+only, zero solver executions), prints the human-readable contract
+table, writes ``experiments/contract_audit.json``, and exits non-zero
+when any cell deviates from the paper-expected outcome matrix.  This is
+the CI ``analysis-audit`` job.
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    audit_p = sub.add_parser(
+        "audit", help="statically verify the contract matrix")
+    audit_p.add_argument("--quick", action="store_true",
+                         help="core matrix only (CI mode): skip the "
+                         "extra kernel-dispatching preconditioner cells")
+    audit_p.add_argument("--out", default="experiments/contract_audit.json",
+                         help="artifact path (default: %(default)s)")
+    audit_p.add_argument("--no-mesh", action="store_true",
+                         help="skip the sharded mesh smoke cells")
+    audit_p.add_argument("--devices", type=int, default=8,
+                         help="fake host devices for the mesh smoke "
+                         "(default: %(default)s; set BEFORE jax imports)")
+    args = ap.parse_args(argv)
+
+    # The mesh smoke needs the fake devices staged before the XLA
+    # backend initializes — but ``python -m repro.analysis`` imports the
+    # repro package (and with it jax) before this file runs.  Stage the
+    # flag and re-exec once if the backend already pinned the device
+    # count.
+    if args.devices > 1 and not args.no_mesh:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count"
+                f"={args.devices}").strip()
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    if args.devices > 1 and not args.no_mesh \
+            and len(jax.devices()) < args.devices \
+            and os.environ.get("_REPRO_AUDIT_REEXEC") != "1":
+        os.environ["_REPRO_AUDIT_REEXEC"] = "1"
+        os.execv(sys.executable,
+                 [sys.executable, "-m", "repro.analysis"]
+                 + list(argv if argv is not None else sys.argv[1:]))
+
+    from repro.analysis.audit import audit_table, run_audit
+
+    artifact = run_audit(quick=args.quick, mesh_smoke=not args.no_mesh)
+    out = args.out
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True)
+            f.write("\n")
+    print(audit_table(artifact))
+    if out:
+        print(f"\nartifact: {out}")
+    return 0 if artifact["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

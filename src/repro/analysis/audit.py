@@ -1,0 +1,256 @@
+"""The binding-matrix audit: statically prove the contracts everywhere.
+
+``run_audit`` sweeps every cell of the scenario matrix — all 7 methods x
+{jnp, pallas} x {guard on/off} x {precond on/off}, the open-loop service
+chunk, and an all-devices mesh smoke — through :func:`trace_binding` and
+the contract passes, then compares each finding against the paper's
+expected outcome for that cell.  Everything is TRACED, never executed:
+zero solver runs, zero compiles.
+
+The baseline methods are the audit's negative controls: BiCGStab / CGS /
+GPBi-CG *should* fail ``one_reduction_per_iteration`` and
+``overlap_edge_free`` — that differential is the paper's claim, and an
+analyzer that cannot see it proves nothing.  The audit therefore fails
+on DEVIATIONS from the expected matrix (a pipelined method regressing to
+two reductions, OR a baseline suddenly "passing" — which would mean the
+probe lost its anchor), not on expected violations.
+
+Artifact: ``experiments/contract_audit.json`` (schema
+``repro.analysis/contract_audit/v1``), consumed by the golden-snapshot
+test and uploaded by the CI ``analysis-audit`` job.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SOLVERS
+from repro.core.linear_operator import Stencil7Operator
+
+from .passes import _KERNEL_PHASES, run_passes
+from .report import OK, SKIPPED, VIOLATION, BindingSpec, ContractReport
+from .trace import trace_binding
+
+__all__ = ["ARTIFACT_SCHEMA", "expected_outcomes", "audit_specs",
+           "run_audit", "METHOD_ORDER"]
+
+ARTIFACT_SCHEMA = "repro.analysis/contract_audit/v1"
+
+#: audit row order: the paper's methods first, then the baselines
+METHOD_ORDER = ("p-bicgsafe", "p-bicgsafe-rr", "ssbicgsafe2",
+                "p-bicgstab", "bicgstab", "gpbicg", "cgs")
+
+#: methods whose single fused phase ALSO hides behind the matvec
+PIPELINED = frozenset({"p-bicgsafe", "p-bicgsafe-rr"})
+#: methods with the one fused (9[, m]) reduction phase per iteration
+FUSED = PIPELINED | frozenset({"ssbicgsafe2"})
+
+SUBSTRATE_ORDER = ("jnp", "pallas")
+
+
+def expected_outcomes(spec: BindingSpec) -> Dict[str, str]:
+    """The paper-expected status of every contract for one cell.
+
+    Pipelined BiCGSafe methods satisfy the full contract set; sequential
+    ssBiCGSafe2 fuses the dots but its reduction consumes the matvec
+    (one sync, no hiding); the BiCGStab/GPBi-CG family keeps 2-3
+    scattered reductions — the negative controls.
+    """
+    exp = {}
+    exp["one_reduction_per_iteration"] = \
+        OK if spec.method in FUSED else VIOLATION
+    # a 1-device mesh has no halo ppermutes: every reduction is
+    # trivially edge-free there, even for the sequential methods
+    trivial_mesh = spec.binding == "mesh" and spec.mesh_shape is not None \
+        and all(d == 1 for d in spec.mesh_shape)
+    exp["overlap_edge_free"] = \
+        OK if (spec.method in PIPELINED or trivial_mesh) else VIOLATION
+    exp["single_psum_sharded"] = SKIPPED if spec.binding != "mesh" else (
+        OK if spec.method in FUSED else VIOLATION)
+    exp["kernel_backed"] = OK if (spec.substrate == "pallas"
+                                  and spec.method in _KERNEL_PHASES) \
+        else SKIPPED
+    exp["dtype_flow"] = OK
+    return exp
+
+
+def _audit_operator(nx=8, ny=6, nz=6, dtype=None):
+    """A non-symmetric convection-diffusion stencil, built directly so
+    the audit performs no eager operator application."""
+    import numpy as np
+    dtype = dtype or jax.dtypes.canonicalize_dtype(np.float64)
+    c = jnp.array([6.5, -1.5, -1.0, -1.25, -1.0, -1.0, -1.0], dtype=dtype)
+    return Stencil7Operator(c, nx, ny, nz)
+
+
+def audit_specs(quick: bool = False) -> List[dict]:
+    """The trace_binding kwargs for every audit cell.
+
+    The core matrix is identical in quick and full mode (the acceptance
+    surface: 7 methods x 2 substrates x guard x precond + open-loop +
+    mesh smoke); full mode widens the preconditioner axis to the kernel-
+    dispatching ones (ssor, block_jacobi).
+    """
+    preconds: Tuple = (None, "jacobi") if quick \
+        else (None, "jacobi", "ssor", "block_jacobi")
+    cells: List[dict] = []
+    for method in METHOD_ORDER:
+        binding = "batched" if method == "p-bicgsafe" else "single"
+        for substrate in SUBSTRATE_ORDER:
+            for guard in (False, True):
+                for precond in preconds:
+                    cells.append(dict(method=method, binding=binding,
+                                      substrate=substrate, guard=guard,
+                                      precond=precond))
+    # the service's open-loop chunk program (p-BiCGSafe only)
+    for substrate in SUBSTRATE_ORDER:
+        for guard in (False, True):
+            cells.append(dict(method="p-bicgsafe", binding="open_loop",
+                              substrate=substrate, guard=guard,
+                              precond=None))
+    return cells
+
+
+def _mesh_specs() -> List[dict]:
+    """Mesh smoke cells (sharded drivers; psum count is mesh-size
+    independent, so any device count proves the contract)."""
+    return [
+        dict(method="p-bicgsafe", binding="mesh", substrate="jnp",
+             guard=False, precond=None),
+        dict(method="p-bicgsafe", binding="mesh", substrate="jnp",
+             guard=True, precond=None),
+        # shard-local preconditioning must add ZERO collectives
+        dict(method="p-bicgsafe", binding="mesh", substrate="jnp",
+             guard=False, precond="jacobi"),
+        dict(method="ssbicgsafe2", binding="mesh", substrate="jnp",
+             guard=False, precond=None),
+        dict(method="bicgstab", binding="mesh", substrate="jnp",
+             guard=False, precond=None),
+    ]
+
+
+def _build_mesh():
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    return Mesh(np.array(devs).reshape(len(devs)), ("x",))
+
+
+def _mesh_operator(ndev: int):
+    # x-slab sharding needs nx % ndev == 0; 8 covers 1/2/4/8 devices
+    nx = 8 if 8 % ndev == 0 else 8 * ndev
+    return _audit_operator(nx=nx, ny=6, nz=6)
+
+
+def run_audit(quick: bool = False,
+              mesh_smoke: bool = True,
+              contracts: Optional[Sequence[str]] = None) -> dict:
+    """Sweep the matrix; return the artifact dict (schema
+    ``repro.analysis/contract_audit/v1``).  ``artifact["ok"]`` is False
+    iff any cell deviated from :func:`expected_outcomes`."""
+    op = _audit_operator()
+    cells = audit_specs(quick=quick)
+    reports: List[ContractReport] = []
+    records: List[dict] = []
+    deviations: List[dict] = []
+
+    def run_cell(kw, operator, mesh=None):
+        tb = trace_binding(kw["method"], operator, binding=kw["binding"],
+                           substrate=kw["substrate"], guard=kw["guard"],
+                           precond=kw["precond"], m=3, mesh=mesh)
+        rep = run_passes(tb, names=contracts)
+        exp = expected_outcomes(tb.spec)
+        devs = []
+        for f in rep.findings:
+            want = exp.get(f.contract)
+            if want is not None and f.status != want:
+                devs.append({"binding": tb.spec.label,
+                             "contract": f.contract,
+                             "expected": want, "actual": f.status,
+                             "detail": f.detail})
+        reports.append(rep)
+        deviations.extend(devs)
+        rec = rep.to_dict()
+        rec["expected"] = {f.contract: exp.get(f.contract)
+                           for f in rep.findings}
+        rec["deviations"] = devs
+        records.append(rec)
+
+    for kw in cells:
+        run_cell(kw, op)
+    n_mesh = 0
+    if mesh_smoke:
+        mesh = _build_mesh()
+        mop = _mesh_operator(len(jax.devices()))
+        for kw in _mesh_specs():
+            run_cell(kw, mop, mesh=mesh)
+            n_mesh += 1
+
+    # the method x substrate contract matrix (aggregated over guard /
+    # precond cells; a disagreement inside one aggregate cell surfaces
+    # as "mixed" — itself a deviation signal)
+    contract_names = []
+    for r in reports:
+        for f in r.findings:
+            if f.contract not in contract_names:
+                contract_names.append(f.contract)
+    matrix: Dict[str, Dict[str, str]] = {}
+    for r in reports:
+        if r.spec.binding == "mesh":
+            continue
+        key = f"{r.spec.method}/{r.spec.substrate}"
+        cell = matrix.setdefault(key, {})
+        for f in r.findings:
+            prev = cell.get(f.contract)
+            cell[f.contract] = f.status if prev in (None, f.status) \
+                else "mixed"
+
+    return {
+        "schema": ARTIFACT_SCHEMA,
+        "jax_version": jax.__version__,
+        "quick": bool(quick),
+        "n_devices": len(jax.devices()),
+        "n_cells": len(reports),
+        "n_mesh_cells": n_mesh,
+        "methods": list(METHOD_ORDER),
+        "substrates": list(SUBSTRATE_ORDER),
+        "contracts": contract_names,
+        "matrix": matrix,
+        "reports": records,
+        "deviations": deviations,
+        "ok": not deviations,
+    }
+
+
+def audit_table(artifact: dict) -> str:
+    """Render the human-readable contract table for an audit artifact."""
+    lines = ["contract matrix (method/substrate, aggregated over "
+             "guard x precond cells):", ""]
+    contracts = artifact["contracts"]
+    cellmap = {OK: "pass", VIOLATION: "FAIL", SKIPPED: "-",
+               "mixed": "MIXED"}
+    headers = ["method/substrate"] + contracts
+    rows = []
+    for key, cell in artifact["matrix"].items():
+        rows.append([key] + [cellmap.get(cell.get(c, SKIPPED), "?")
+                             for c in contracts])
+    widths = [max(len(h), *(len(r[i]) for r in rows))
+              for i, h in enumerate(headers)]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    lines.append(fmt.format(*headers))
+    lines.append(fmt.format(*("-" * w for w in widths)))
+    lines += [fmt.format(*r) for r in rows]
+    lines.append("")
+    lines.append(f"{artifact['n_cells']} cells traced "
+                 f"({artifact['n_mesh_cells']} mesh, "
+                 f"{artifact['n_devices']} device(s)); "
+                 + ("all outcomes match the paper-expected matrix"
+                    if artifact["ok"] else
+                    f"{len(artifact['deviations'])} DEVIATION(S) from "
+                    "the expected matrix"))
+    for d in artifact["deviations"]:
+        lines.append(f"  !! {d['binding']}: {d['contract']} expected "
+                     f"{d['expected']}, got {d['actual']} — {d['detail']}")
+    return "\n".join(lines)

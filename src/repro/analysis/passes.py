@@ -1,0 +1,270 @@
+"""The contract passes: the paper's invariants as named static checks.
+
+Each pass consumes a :class:`~repro.analysis.trace.TracedBinding` and
+returns one :class:`~repro.analysis.report.Finding`.  The registry
+:data:`PASSES` is ordered and name-addressable; :func:`run_passes`
+applies every applicable pass and packages a
+:class:`~repro.analysis.report.ContractReport`.
+
+The five contracts (Huynh & Suito 2021; Cools & Vanroose 1612.01395;
+Cools 1809.01948):
+
+* ``one_reduction_per_iteration`` — the while body holds EXACTLY ONE
+  fused reduction phase, carrying the whole (9, m) partial block —
+  (11, m) when the guard rides along — never a second sync.
+* ``overlap_edge_free``           — that reduction transitively consumes
+  NO output of the in-flight matvec (halo ``ppermute`` on a mesh), so
+  communication can hide behind computation.
+* ``single_psum_sharded``         — on a mesh the reduction lowers to
+  ONE ``psum`` per iteration and nothing else introduces collectives
+  (shard-local preconditioners must cost zero extra).
+* ``kernel_backed``               — pallas-substrate bindings dispatch
+  the hot-loop phases to Pallas kernels (``pallas_call`` in the body),
+  no silent jnp fallback.
+* ``dtype_flow``                  — no precision-losing float cast inside
+  the recurrence chain (the PR-2 class of bug: an f32/bf16 downcast in
+  an operator or preconditioner closure silently breaks recurrence
+  linearity).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .jaxpr_tools import (count_prim, find_prim_eqns, subjaxprs,
+                          transitive_inputs)
+from .report import (OK, SKIPPED, VIOLATION, ContractReport, Finding,
+                     eqn_provenance)
+from .trace import TracedBinding
+
+__all__ = ["PASSES", "contract_pass", "run_passes",
+            "reduction_consumes_matvec"]
+
+#: ordered registry: name -> (applies(spec) predicate, pass fn)
+PASSES: "OrderedDict[str, tuple]" = OrderedDict()
+
+
+def contract_pass(name: str, applies: Optional[Callable] = None):
+    """Register a contract pass under ``name`` (decorator)."""
+    def deco(fn):
+        PASSES[name] = ((applies or (lambda spec: True)), fn)
+        return fn
+    return deco
+
+
+def run_passes(tb: TracedBinding,
+               names: Optional[Sequence[str]] = None) -> ContractReport:
+    """Run the (named subset of the) registered passes over one traced
+    binding; inapplicable passes report ``skipped``."""
+    findings: List[Finding] = []
+    for name, (applies, fn) in PASSES.items():
+        if names is not None and name not in names:
+            continue
+        if not applies(tb.spec):
+            findings.append(Finding(name, SKIPPED, "not applicable to "
+                                    f"{tb.spec.binding}/{tb.spec.substrate}"))
+            continue
+        findings.append(fn(tb))
+    return ContractReport(spec=tb.spec, findings=tuple(findings))
+
+
+# ---------------------------------------------------------------------------
+# pass bodies
+# ---------------------------------------------------------------------------
+
+def _fused_leading_dim(spec) -> int:
+    return 11 if spec.guard_effective else 9
+
+
+@contract_pass("one_reduction_per_iteration")
+def one_reduction_per_iteration(tb: TracedBinding) -> Finding:
+    """EXACTLY ONE reduction phase per iteration, carrying the whole
+    (9[, m]) — guarded: (11[, m]) — fused partial block."""
+    name = "one_reduction_per_iteration"
+    if tb.body is None:
+        return Finding(name, VIOLATION, "no while loop found in the "
+                       "traced program")
+    reds = tb.reduce_eqns()
+    if len(reds) != 1:
+        return Finding(
+            name, VIOLATION,
+            f"{len(reds)} reduction phases per iteration (contract: 1)",
+            tuple(eqn_provenance(e) for e in reds))
+    shape = tuple(reds[0].invars[0].aval.shape)
+    want = _fused_leading_dim(tb.spec)
+    if shape[:1] != (want,):
+        return Finding(
+            name, VIOLATION,
+            f"the single reduction carries {shape}, not the fused "
+            f"({want}[, m]) partial block",
+            (eqn_provenance(reds[0]),))
+    return Finding(name, OK,
+                   f"one fused {shape} reduction per iteration",
+                   (eqn_provenance(reds[0]),))
+
+
+def reduction_consumes_matvec(tb: TracedBinding):
+    """Shared overlap core: does ANY reduction phase in the while body
+    transitively consume the in-flight matvec (matvec tag locally, halo
+    ``ppermute`` on a mesh)?  Returns ``(edge_exists, detail,
+    provenance)`` or raises ValueError when the probe found nothing to
+    anchor on."""
+    if tb.body is None:
+        raise ValueError("no while loop found in the traced program")
+    if tb.spec.binding == "mesh":
+        # the dependency walk is scoped to ONE jaxpr (variables are
+        # jaxpr-local), so anchor on the body-level psum/ppermute eqns —
+        # where the jit=False sharded drivers place them
+        reds = [e for e in tb.body.eqns if e.primitive.name == "psum"]
+        if not reds:
+            raise ValueError("no body-level psum found in the while body")
+        producer_outs = set()
+        for eqn in tb.body.eqns:
+            if eqn.primitive.name == "ppermute":
+                producer_outs.update(eqn.outvars)
+        producer_kind = "halo ppermute"
+        if not producer_outs:
+            return (False, "no halo ppermutes in the body (single-device "
+                    "mesh); reduction trivially edge-free", ())
+    else:
+        reds = tb.reduce_eqns()
+        if not reds:
+            raise ValueError("no reduction phase found in the while body")
+        producer_outs = set()
+        for eqn in tb.matvec_tag_eqns():
+            producer_outs.update(eqn.outvars)
+        producer_kind = "matvec"
+        if not producer_outs:
+            raise ValueError("no matvec tag found in the while body")
+    for red in reds:
+        needed = transitive_inputs(tb.body, red)
+        if needed & producer_outs:
+            return (True,
+                    f"a reduction transitively consumes the in-flight "
+                    f"{producer_kind} output",
+                    (eqn_provenance(red),))
+    return (False,
+            f"no dependency edge from any reduction to the in-flight "
+            f"{producer_kind} ({len(reds)} reduction(s), "
+            f"{len(producer_outs)} tagged output(s))",
+            tuple(eqn_provenance(e) for e in reds))
+
+
+@contract_pass("overlap_edge_free")
+def overlap_edge_free(tb: TracedBinding) -> Finding:
+    """The reduction has NO dependency edge to the in-flight matvec —
+    the communication-hiding property itself."""
+    name = "overlap_edge_free"
+    try:
+        edge, detail, prov = reduction_consumes_matvec(tb)
+    except ValueError as e:
+        return Finding(name, VIOLATION, f"probe inconclusive: {e}")
+    return Finding(name, VIOLATION if edge else OK, detail, prov)
+
+
+#: collectives that must NOT appear in a sharded iteration body beyond
+#: the single psum (halo ppermutes are the matvec's and are allowed)
+_FORBIDDEN_COLLECTIVES = ("all_gather", "all_to_all", "reduce_scatter",
+                          "pmax", "pmin", "pgather")
+
+
+@contract_pass("single_psum_sharded",
+               applies=lambda spec: spec.binding == "mesh")
+def single_psum_sharded(tb: TracedBinding) -> Finding:
+    """On a mesh: ONE psum per iteration — the fused block — and zero
+    other collectives (shard-local preconditioners add none)."""
+    name = "single_psum_sharded"
+    if tb.body is None:
+        return Finding(name, VIOLATION, "no while loop found")
+    psums = find_prim_eqns(tb.body, "psum")
+    if len(psums) != 1:
+        return Finding(name, VIOLATION,
+                       f"{len(psums)} psums per iteration (contract: 1)",
+                       tuple(eqn_provenance(e) for e in psums))
+    extra = [p for p in _FORBIDDEN_COLLECTIVES
+             if count_prim(tb.body, p) > 0]
+    if extra:
+        return Finding(name, VIOLATION,
+                       f"extra collectives in the iteration body: {extra}")
+    shape = tuple(psums[0].invars[0].aval.shape)
+    want = _fused_leading_dim(tb.spec)
+    if shape[:1] != (want,):
+        return Finding(name, VIOLATION,
+                       f"the psum carries {shape}, not the fused "
+                       f"({want}[, m]) block", (eqn_provenance(psums[0]),))
+    return Finding(name, OK, f"one {shape} psum per iteration, no other "
+                   "collectives", (eqn_provenance(psums[0]),))
+
+
+#: kernel-backed fused phases per method on the pallas substrate: the
+#: pipelined variants run fused-dots AND the fused-axpy update phase as
+#: kernels; sequential ssBiCGSafe2 has only the fused-dots phase.  The
+#: BiCGStab/GPBi-CG family's 1-5 dot phases intentionally stay jnp (not
+#: the paper's hot path), so the contract does not apply to them.
+_KERNEL_PHASES = {"p-bicgsafe": 2, "p-bicgsafe-rr": 2, "ssbicgsafe2": 1}
+
+
+@contract_pass("kernel_backed",
+               applies=lambda spec: spec.substrate == "pallas"
+               and spec.method in _KERNEL_PHASES)
+def kernel_backed(tb: TracedBinding) -> Finding:
+    """Pallas-substrate bindings dispatch the hot-loop phases to Pallas
+    kernels: the while body must contain the method's fused-phase
+    ``pallas_call``s (plus the block-Jacobi apply kernel when that
+    preconditioner is bound) — a silent jnp fallback shows up here as a
+    missing kernel."""
+    name = "kernel_backed"
+    if tb.body is None:
+        return Finding(name, VIOLATION, "no while loop found")
+    n_calls = count_prim(tb.body, "pallas_call")
+    want = _KERNEL_PHASES.get(tb.spec.method, 1) + tb.spec.precond_kernels
+    if n_calls < want:
+        return Finding(name, VIOLATION,
+                       f"{n_calls} pallas_call(s) in the iteration body "
+                       f"(contract: >= {want} fused-phase kernel(s)"
+                       + ("; + block-Jacobi apply"
+                          if tb.spec.precond_kernels else "")
+                       + ") — silent jnp fallback")
+    return Finding(name, OK,
+                   f"{n_calls} pallas_call(s) back the iteration body")
+
+
+def _walk_converts(jaxpr, acc):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type":
+            acc.append(eqn)
+        for sub in subjaxprs(eqn):
+            _walk_converts(sub, acc)
+    return acc
+
+
+@contract_pass("dtype_flow")
+def dtype_flow(tb: TracedBinding) -> Finding:
+    """No precision-losing float cast inside the recurrence chain.
+
+    Pipelined recurrences replace the true residual with recurred
+    vectors; a hidden downcast (f64->f32, f32->bf16) inside the operator
+    or preconditioner closure breaks their linearity and lets the
+    recurred residual drift from the true one — the exact class of bug
+    PR 2 root-caused in the GGN path.  Statically: the while body must
+    contain no ``convert_element_type`` from a wider float to a narrower
+    one."""
+    import numpy as np
+    name = "dtype_flow"
+    if tb.body is None:
+        return Finding(name, VIOLATION, "no while loop found")
+    bad = []
+    for eqn in _walk_converts(tb.body, []):
+        src = np.dtype(eqn.invars[0].aval.dtype)
+        dst = np.dtype(eqn.params.get("new_dtype"))
+        if (src.kind == "f" and dst.kind == "f"
+                and dst.itemsize < src.itemsize):
+            bad.append((str(src), str(dst), eqn))
+    if bad:
+        return Finding(
+            name, VIOLATION,
+            "precision-losing float cast(s) in the recurrence chain: "
+            + ", ".join(f"{s}->{d}" for s, d, _ in bad),
+            tuple(eqn_provenance(e) for _, _, e in bad))
+    return Finding(name, OK, "no precision-losing float casts in the "
+                   "iteration body")

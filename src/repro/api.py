@@ -297,6 +297,59 @@ class LinearSolver:
         return (f"<LinearSolver {self.method!r} substrate={self.sub.name!r} "
                 f"precond={pc!r} fingerprint={fp!r}>")
 
+    def verify_contracts(self, *, bindings: Optional[Sequence[str]] = None,
+                         mesh=None, m: int = 3,
+                         contracts: Optional[Sequence[str]] = None,
+                         raise_on_violation: bool = False):
+        """Statically verify the paper's communication contracts on THIS
+        session's bindings — tracing only, no solve runs.
+
+        Traces the session's method/operator/substrate/precond/guard
+        through :mod:`repro.analysis` and runs the contract passes
+        (one fused reduction per iteration, overlap-edge freedom, kernel
+        backing, dtype flow; plus the single-psum pass when ``mesh=`` is
+        given and the operator is a stencil).
+
+        Args:
+          bindings: binding kinds to trace; default: ``["batched"]`` for
+            p-BiCGSafe sessions (the multi-RHS front door), else
+            ``["single"]``.
+          mesh: a ``jax.sharding.Mesh`` — adds the sharded ``"mesh"``
+            cell to the sweep.
+          contracts: names from :data:`repro.analysis.PASSES` to run
+            (default: all applicable).
+          raise_on_violation: raise ``ValueError`` listing the violated
+            contracts instead of returning reports that carry them.
+
+        Returns:
+          list of :class:`repro.analysis.ContractReport`, one per traced
+          binding.
+        """
+        from repro.analysis import run_passes, trace_binding
+        if bindings is None:
+            bindings = ["batched"] if (self.method == "p-bicgsafe"
+                                       or self.blocked) else ["single"]
+        bindings = list(bindings)
+        if mesh is not None and "mesh" not in bindings:
+            bindings.append("mesh")
+        reports = []
+        for binding in bindings:
+            reports.append(run_passes(trace_binding(
+                self.method, self.operator, binding=binding,
+                substrate=self.sub, precond=self.precond,
+                guard=self.config.guard, m=m, config=self.config,
+                mesh=mesh if binding == "mesh" else None,
+                blocked=self.blocked), names=contracts))
+        if raise_on_violation:
+            bad = [(r.spec.label, f) for r in reports
+                   for f in r.violations]
+            if bad:
+                raise ValueError(
+                    "contract violation(s) on this session's bindings:\n"
+                    + "\n".join(f"  {label}: {f.contract} — {f.detail}"
+                                for label, f in bad))
+        return reports
+
     def _require_pbicgsafe(self, what: str) -> None:
         """The batched/open-loop iteration (repro.core.multirhs) IS
         p-BiCGSafe; a session bound to another method must not silently

@@ -3,12 +3,23 @@
 The repo targets a range of jax versions: newer releases expose
 ``jax.shard_map`` (with ``check_vma``) and ``jax.sharding.AxisType``,
 while 0.4.x has ``jax.experimental.shard_map.shard_map`` (``check_rep``)
-and no axis types.  Call sites import these two wrappers instead of
+and no axis types.  Call sites import these wrappers instead of
 branching locally.
+
+The jaxpr vocabulary types (``Jaxpr``, ``ClosedJaxpr``, ``Literal``,
+``Var``) moved from ``jax.core`` to ``jax.extend.core``; referencing
+them through ``jax.core`` emits DeprecationWarnings on newer jax and
+will eventually break.  The static contract analyzer
+(:mod:`repro.analysis`) and every jaxpr probe import them from here.
 """
 from __future__ import annotations
 
 import jax
+
+try:                                     # jax >= 0.4.33
+    from jax.extend.core import ClosedJaxpr, Jaxpr, Literal, Var
+except ImportError:                      # older jax: the pre-move home
+    from jax.core import ClosedJaxpr, Jaxpr, Literal, Var  # noqa: F401
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):

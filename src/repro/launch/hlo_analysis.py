@@ -1,229 +1,11 @@
-"""HLO text analysis: collective-bytes extraction + dependency reachability.
+"""Compatibility shim: this module moved to :mod:`repro.analysis.hlo`.
 
-``collective_stats``   sums operand/result sizes of every collective in an
-HLO module text and estimates wire bytes per device (ring-algorithm
-conventions).  This feeds the roofline's collective term — cost_analysis()
-does not report collectives.
-
-``HloGraph``           a small parser of HLO text into an op graph, used by
-benchmarks/bench_overlap.py to prove structurally that p-BiCGSafe's fused
-all-reduce has no dependency path to/from the overlapped SpMV while
-ssBiCGSafe2's does.
+The HLO text machinery (collective-bytes extraction, the def-use
+``HloGraph``, the overlap report) is now the HLO backend of the static
+contract analyzer.  Existing importers keep working through this
+re-export.
 """
-from __future__ import annotations
-
-import dataclasses
-import re
-from collections import defaultdict
-from typing import Dict, List, Optional, Set, Tuple
-
-import numpy as np
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f16|c64|c128)\[([\d,]*)\]")
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[\w\[\],{}\s]*?))\s*"
-    r"([\w\-]+)\(([^)]*)\)(.*)$")
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _shape_bytes(typestr: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(typestr):
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES.get(dt, 4)
-    return total
-
-
-def _group_size(line: str, default: int) -> int:
-    m = _GROUPS_V2_RE.search(line)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_RE.search(line)
-    if m:
-        return len([x for x in m.group(1).split(",") if x.strip() != ""])
-    return default
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    counts: Dict[str, int]
-    result_bytes: Dict[str, int]
-    wire_bytes: Dict[str, float]     # est. bytes on the wire per device
-    wire_by_dtype: Dict[str, float] = dataclasses.field(default_factory=dict)
-
-    @property
-    def total_wire_bytes(self) -> float:
-        return sum(self.wire_bytes.values())
-
-    @property
-    def total_count(self) -> int:
-        return sum(self.counts.values())
-
-    def tpu_wire_bytes(self, bf16_program: bool) -> float:
-        """XLA:CPU legalizes bf16 to f32; for bf16 programs the f32
-        collective bytes are 2x what a TPU build moves."""
-        if not bf16_program:
-            return self.total_wire_bytes
-        f32 = self.wire_by_dtype.get("f32", 0.0)
-        return self.total_wire_bytes - f32 / 2
-
-
-def collective_stats(hlo_text: str, n_devices: int = 1,
-                     while_body_multiplier: float = 1.0) -> CollectiveStats:
-    """Sum collective sizes over the module.
-
-    ``while_body_multiplier``: collectives inside while-loop bodies execute
-    once per trip, but HLO text lists them once; pass the scan length
-    (n_layers for the layer scan) to correct the totals.  Applied to every
-    while body (the layer scan is the only collective-bearing loop in the
-    step functions).
-    """
-    if while_body_multiplier != 1.0:
-        comps = split_computations(hlo_text)
-        bodies = set()
-        for line in hlo_text.splitlines():
-            m = re.search(r"\bwhile\(.*?body=%?([\w.\-]+)", line)
-            if m:
-                bodies.add(m.group(1))
-        total = CollectiveStats({}, {}, {})
-        for name, body in comps.items():
-            sub = collective_stats(body, n_devices, 1.0)
-            k = while_body_multiplier if name in bodies else 1.0
-            for c in sub.counts:
-                total.counts[c] = total.counts.get(c, 0) \
-                    + int(sub.counts[c] * k)
-                total.result_bytes[c] = total.result_bytes.get(c, 0) \
-                    + int(sub.result_bytes[c] * k)
-                total.wire_bytes[c] = total.wire_bytes.get(c, 0.0) \
-                    + sub.wire_bytes[c] * k
-            for dt, b in sub.wire_by_dtype.items():
-                total.wire_by_dtype[dt] = total.wire_by_dtype.get(dt, 0.0) \
-                    + b * k
-        return total
-
-    counts: Dict[str, int] = defaultdict(int)
-    rbytes: Dict[str, int] = defaultdict(int)
-    wire: Dict[str, float] = defaultdict(float)
-    wire_dt: Dict[str, float] = defaultdict(float)
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if "=" not in s:
-            continue
-        m = re.search(r"=\s*((?:\([^)]*\))|(?:[^\s]+))\s+([\w\-]+)", s)
-        if not m:
-            continue
-        typestr, opname = m.group(1), m.group(2)
-        base = opname.split(".")[0]
-        # normalize fused/async variants: all-reduce-start, all-gather-done...
-        for c in COLLECTIVES:
-            if base == c or base == c + "-start":
-                if base.endswith("-start") and "-done" in s:
-                    continue
-                sz = _shape_bytes(typestr)
-                g = _group_size(s, n_devices)
-                counts[c] += 1
-                rbytes[c] += sz
-                if c == "all-reduce":
-                    w = 2.0 * sz * (g - 1) / max(g, 1)
-                elif c in ("all-gather", "all-to-all"):
-                    w = sz * (g - 1) / max(g, 1)
-                elif c == "reduce-scatter":
-                    # result is the scattered shard; wire ~ result*(g-1)
-                    w = sz * (g - 1)
-                else:  # collective-permute
-                    w = sz
-                wire[c] += w
-                dts = _SHAPE_RE.findall(typestr)
-                if dts:
-                    wire_dt[dts[0][0]] += w
-                break
-    return CollectiveStats(dict(counts), dict(rbytes), dict(wire),
-                           dict(wire_dt))
-
-
-# ---------------------------------------------------------------------------
-# dependency graph
-# ---------------------------------------------------------------------------
-
-def split_computations(hlo_text: str) -> Dict[str, str]:
-    """Split an HLO module's text into {computation_name: body_text}.
-
-    A computation header is any non-instruction line ending with '{'
-    (parameter tuples may contain nested parens, so we only parse the
-    leading name token).
-    """
-    comps: Dict[str, List[str]] = {}
-    current = None
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if s.endswith("{") and "=" not in s.split("(", 1)[0]:
-            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", s)
-            if m:
-                current = m.group(1)
-                comps[current] = []
-                continue
-        if s == "}":
-            current = None
-            continue
-        if current is not None:
-            comps[current].append(line)
-    return {k: "\n".join(v) for k, v in comps.items()}
-
-
-class HloGraph:
-    """Def-use graph over one HLO computation (by instruction name)."""
-
-    def __init__(self, computation_text: str):
-        self.ops: Dict[str, str] = {}       # name -> opcode
-        self.deps: Dict[str, List[str]] = {}  # name -> operand names
-        for line in computation_text.splitlines():
-            s = line.strip()
-            if "=" not in s:
-                continue
-            m = re.match(
-                r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
-                r"(?:\([^=]*?\)|[\w\[\],{}]+)\s+([\w\-]+)\(", s)
-            if not m:
-                continue
-            name, opcode = m.group(1), m.group(2)
-            rest = s[m.end():]
-            args = re.findall(r"%([\w.\-]+)", rest)
-            # strip attribute references like to_apply=%add
-            self.ops[name] = opcode
-            self.deps[name] = [a for a in args if a != name]
-
-    def find(self, opcode_prefix: str) -> List[str]:
-        return [n for n, op in self.ops.items()
-                if op.startswith(opcode_prefix)]
-
-    def ancestors(self, name: str) -> Set[str]:
-        seen: Set[str] = set()
-        stack = [name]
-        while stack:
-            n = stack.pop()
-            for d in self.deps.get(n, []):
-                if d not in seen and d in self.ops:
-                    seen.add(d)
-                    stack.append(d)
-        return seen
-
-    def depends_on(self, a: str, b: str) -> bool:
-        """True if op a transitively consumes op b."""
-        return b in self.ancestors(a)
-
-    def independent(self, a: str, b: str) -> bool:
-        return not self.depends_on(a, b) and not self.depends_on(b, a)
+from repro.analysis.hlo import (_DTYPE_BYTES, _SHAPE_RE, COLLECTIVES,  # noqa: F401
+                                CollectiveStats, HloGraph,
+                                collective_stats, overlap_report,
+                                split_computations)

@@ -66,8 +66,8 @@ def check_batched(mesh_shape, axis_names, op, b, substrate):
           f"substrate={substrate} iters={np.asarray(res.iterations)}")
 
 
-from _jaxpr_utils import eqn_needs_ppermute as _eqn_needs_ppermute  # noqa: E402
-from _jaxpr_utils import find_while_body as _find_while_body  # noqa: E402
+from repro.analysis import eqn_needs_ppermute as _eqn_needs_ppermute  # noqa: E402
+from repro.analysis import find_while_body as _find_while_body  # noqa: E402
 
 
 def check_batched_structure(op, b):

@@ -1,12 +1,23 @@
-"""Tests for the HLO analysis + analytic flop counting machinery."""
+"""Tests for the analysis layer: HLO analysis, analytic flop counting,
+and the static contract passes of :mod:`repro.analysis`."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax import lax
 
+from conftest import enable_x64
+from repro.analysis import (BindingSpec, ContractReport, Finding,
+                            REDUCE_MARK_DIM, TracedBinding, format_table,
+                            run_passes, tag_matvec, tag_reduce, trace_fn)
+from repro.analysis.audit import (ARTIFACT_SCHEMA, METHOD_ORDER,
+                                  audit_table, expected_outcomes, run_audit)
+from repro.analysis.hlo import (HloGraph, collective_stats,
+                                split_computations)
+from repro.analysis.trace import trace_binding
 from repro.launch.flops import count_fn, count_jaxpr
-from repro.launch.hlo_analysis import (HloGraph, collective_stats,
-                                       split_computations)
 
 HLO_SNIPPET = """
 HloModule test
@@ -121,3 +132,220 @@ def test_count_model_flops_close_to_6nd():
     # full remat: ~8*N*D (2 fwd + 4 bwd + 2 recompute); embeddings skew small
     ratio = c["flops"] / (8 * n_params * tokens)
     assert 0.5 < ratio < 3.0, ratio
+
+
+# ---------------------------------------------------------------------------
+# contract passes (repro.analysis): clean bindings pass, hand-built
+# violating programs make each pass fail when it should
+# ---------------------------------------------------------------------------
+
+def _stencil_op(nx=6, ny=4, nz=4):
+    from repro.core.linear_operator import Stencil7Operator
+    dtype = jax.dtypes.canonicalize_dtype(np.float64)
+    c = jnp.array([6.5, -1.5, -1.0, -1.25, -1.0, -1.0, -1.0], dtype)
+    return Stencil7Operator(c, nx, ny, nz)
+
+
+def _probe_spec(**kw):
+    base = dict(method="probe", substrate="jnp", binding="single", m=1)
+    base.update(kw)
+    return BindingSpec(**base)
+
+
+def _probe_loop(b, body_fn, iters=5):
+    return lax.while_loop(lambda c: c[1] < iters,
+                          lambda c: body_fn(*c), (b, 0))[0]
+
+
+def test_clean_pipelined_binding_passes_all():
+    tb = trace_binding("p-bicgsafe", _stencil_op(), binding="batched",
+                       substrate="jnp", m=3)
+    rep = run_passes(tb)
+    assert rep.ok, [f.to_dict() for f in rep.findings if not f.ok]
+    assert rep.finding("one_reduction_per_iteration").status == "ok"
+    assert rep.finding("overlap_edge_free").status == "ok"
+    assert rep.finding("single_psum_sharded").status == "skipped"
+    assert rep.finding("kernel_backed").status == "skipped"
+    assert rep.finding("dtype_flow").status == "ok"
+
+
+def test_second_reduction_violates_one_reduction_pass():
+    """A hand-built while body that syncs TWICE per iteration."""
+    mv = tag_matvec(lambda x: 2.0 * x)
+
+    def body(x, i):
+        y = mv(x)
+        p1 = tag_reduce(x[0] * jnp.ones((9,), x.dtype))
+        p2 = tag_reduce(y[0] * jnp.ones((9,), x.dtype))   # second sync
+        return (y + p1[0] + p2[0], i + 1)
+
+    tb = trace_fn(lambda b: _probe_loop(b, body), jnp.ones((8,)),
+                  spec=_probe_spec())
+    f = run_passes(tb).finding("one_reduction_per_iteration")
+    assert f.status == "violation"
+    assert "2 reduction phases" in f.detail
+    assert len(f.provenance) == 2
+
+
+def test_wrong_partial_block_shape_violates():
+    """One sync, but not carrying the fused (9[, m]) partial block."""
+    def body(x, i):
+        p = tag_reduce(x[:4])
+        return (x + p[0], i + 1)
+
+    tb = trace_fn(lambda b: _probe_loop(b, body), jnp.ones((8,)),
+                  spec=_probe_spec())
+    f = run_passes(tb).finding("one_reduction_per_iteration")
+    assert f.status == "violation"
+    assert "fused" in f.detail
+
+
+def test_reduction_consuming_matvec_violates_overlap():
+    """The reduction transitively consumes the in-flight matvec output:
+    the dependency edge the paper's pipelining removes."""
+    mv = tag_matvec(lambda x: 2.0 * x)
+
+    def dirty(x, i):
+        y = mv(x)
+        p = tag_reduce(y[0] * jnp.ones((9,), x.dtype))    # needs the matvec
+        return (y + p[0], i + 1)
+
+    def clean(x, i):
+        y = mv(x)                                         # in flight
+        p = tag_reduce(x[0] * jnp.ones((9,), x.dtype))    # previous vectors
+        return (y + p[0], i + 1)
+
+    tb = trace_fn(lambda b: _probe_loop(b, dirty), jnp.ones((8,)),
+                  spec=_probe_spec())
+    f = run_passes(tb).finding("overlap_edge_free")
+    assert f.status == "violation"
+    assert "transitively consumes" in f.detail
+
+    tb = trace_fn(lambda b: _probe_loop(b, clean), jnp.ones((8,)),
+                  spec=_probe_spec())
+    assert run_passes(tb).finding("overlap_edge_free").status == "ok"
+
+
+def test_sequential_and_baseline_methods_are_negative_controls():
+    """ssBiCGSafe2 fuses the dots but its reduction consumes the matvec;
+    the BiCGStab family keeps several scattered reductions."""
+    op = _stencil_op()
+    rep = run_passes(trace_binding("ssbicgsafe2", op, binding="single"))
+    assert rep.finding("one_reduction_per_iteration").status == "ok"
+    assert rep.finding("overlap_edge_free").status == "violation"
+    for method in ("bicgstab", "cgs"):
+        rep = run_passes(trace_binding(method, op, binding="single"))
+        assert rep.finding("one_reduction_per_iteration").status \
+            == "violation"
+        assert rep.finding("overlap_edge_free").status == "violation"
+
+
+def test_dtype_flow_catches_reintroduced_f32_downcast():
+    """Regression for the PR-2 (GGN-path) class of bug: an operator
+    closure that silently round-trips the iterate through f32 breaks
+    recurrence linearity — dtype_flow must flag the downcast."""
+    with enable_x64(True):
+        op = _stencil_op()
+        clean = trace_binding("p-bicgsafe", op, binding="batched", m=3)
+        assert run_passes(clean).finding("dtype_flow").status == "ok"
+
+        def dirty(x):                      # f64 -> f32 -> f64 round trip
+            return op.matvec(x.astype(jnp.float32)).astype(x.dtype)
+
+        bmv = jax.vmap(dirty, in_axes=1, out_axes=1)
+        tb = trace_binding("p-bicgsafe", bmv, binding="batched", m=3,
+                           n=op.shape[0], blocked=True)
+        f = run_passes(tb).finding("dtype_flow")
+        assert f.status == "violation"
+        assert "float64->float32" in f.detail
+        assert f.provenance
+
+
+def test_kernel_backed_flags_silent_jnp_fallback():
+    op = _stencil_op()
+    tb = trace_binding("p-bicgsafe", op, binding="batched",
+                       substrate="pallas", m=3)
+    assert run_passes(tb).finding("kernel_backed").status == "ok"
+    # the identical program traced on jnp, under a spec CLAIMING pallas:
+    # exactly what a silent fallback looks like to the analyzer
+    jnp_tb = trace_binding("p-bicgsafe", op, binding="batched",
+                           substrate="jnp", m=3)
+    faked = TracedBinding(
+        spec=dataclasses.replace(jnp_tb.spec, substrate="pallas"),
+        jaxpr=jnp_tb.jaxpr, body=jnp_tb.body)
+    f = run_passes(faked).finding("kernel_backed")
+    assert f.status == "violation"
+    assert "silent jnp fallback" in f.detail
+
+
+def test_expected_outcomes_matrix():
+    def s(**kw):
+        return _probe_spec(**{**dict(method="p-bicgsafe",
+                                     binding="batched", m=3), **kw})
+    exp = expected_outcomes(s())
+    assert exp["one_reduction_per_iteration"] == "ok"
+    assert exp["overlap_edge_free"] == "ok"
+    assert exp["single_psum_sharded"] == "skipped"
+    exp = expected_outcomes(s(method="ssbicgsafe2"))
+    assert exp["one_reduction_per_iteration"] == "ok"
+    assert exp["overlap_edge_free"] == "violation"
+    exp = expected_outcomes(s(method="bicgstab"))
+    assert exp["one_reduction_per_iteration"] == "violation"
+    # a 1-device mesh has no halo ppermutes: overlap trivially edge-free
+    # even for the sequential baselines, but the psum count still tells
+    exp = expected_outcomes(s(method="bicgstab", binding="mesh",
+                              mesh_shape=(1,)))
+    assert exp["overlap_edge_free"] == "ok"
+    assert exp["single_psum_sharded"] == "violation"
+
+
+def test_format_table_and_report_dict():
+    rep = run_passes(trace_binding("p-bicgsafe", _stencil_op(),
+                                   binding="batched", m=3))
+    table = format_table([rep])
+    assert "one_reduction_per_iteration" in table
+    assert "pass" in table
+    d = rep.to_dict()
+    assert d["ok"] is True
+    assert d["binding"]["method"] == "p-bicgsafe"
+    assert {f["contract"] for f in d["findings"]} >= {
+        "one_reduction_per_iteration", "overlap_edge_free", "dtype_flow"}
+
+
+def test_session_verify_contracts():
+    from repro.api import LinearSolver
+    op = _stencil_op()
+    reports = LinearSolver("p-bicgsafe", op).verify_contracts()
+    assert reports and all(r.ok for r in reports)
+    with pytest.raises(ValueError, match="overlap_edge_free"):
+        LinearSolver("ssbicgsafe2", op).verify_contracts(
+            raise_on_violation=True)
+
+
+def test_audit_golden_snapshot():
+    """Pin the audit artifact schema and the expected pass/fail matrix
+    for all 7 methods x 2 substrates (quick mode, in-process: the mesh
+    smoke runs trivially on the single pytest device)."""
+    art = run_audit(quick=True)
+    assert art["schema"] == ARTIFACT_SCHEMA \
+        == "repro.analysis/contract_audit/v1"
+    assert art["ok"] is True
+    assert art["deviations"] == []
+    assert art["n_cells"] == 65 and art["n_mesh_cells"] == 5
+    assert tuple(art["methods"]) == METHOD_ORDER
+    pipelined = {"p-bicgsafe", "p-bicgsafe-rr"}
+    fused = pipelined | {"ssbicgsafe2"}
+    for method in METHOD_ORDER:
+        for substrate in ("jnp", "pallas"):
+            cell = art["matrix"][f"{method}/{substrate}"]
+            assert cell["one_reduction_per_iteration"] == \
+                ("ok" if method in fused else "violation"), (method,
+                                                             substrate)
+            assert cell["overlap_edge_free"] == \
+                ("ok" if method in pipelined else "violation")
+            assert cell["single_psum_sharded"] == "skipped"
+            assert cell["kernel_backed"] == \
+                ("ok" if substrate == "pallas" and method in fused
+                 else "skipped")
+            assert cell["dtype_flow"] == "ok"
+    assert "contract matrix" in audit_table(art)

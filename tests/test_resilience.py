@@ -30,7 +30,9 @@ import numpy as np
 import pytest
 from jax import lax
 
-from _jaxpr_utils import find_while_body as _find_while_body
+from repro.analysis import (BindingSpec, find_while_body as _find_while_body,
+                            reduction_consumes_matvec, tag_matvec,
+                            tag_reduce, trace_fn)
 import repro
 from repro.core import SOLVERS, SolverConfig
 from repro.core import matrices as M
@@ -103,40 +105,25 @@ def test_guarded_overlap_edge(x64, substrate):
     sub = get_substrate(substrate)
     m = 3
     B = jnp.stack([b, 0.5 * b, b + 1.0], axis=1)
-    base = jax.vmap(op.matvec, in_axes=1, out_axes=1)
-    bmv = lambda X: lax.optimization_barrier(base(X))  # noqa: E731
-    spy = lax.optimization_barrier
+    bmv = tag_matvec(jax.vmap(op.matvec, in_axes=1, out_axes=1))
     cfg = SolverConfig(guard=True)
 
     state = init_state(bmv, B, config=cfg, substrate=sub)
-    jaxpr = jax.make_jaxpr(lambda st: step_chunk(
-        bmv, st, 8, config=cfg, dot_reduce=spy, substrate=sub))(state)
-    body = _find_while_body(jaxpr.jaxpr)
-    assert body is not None
-
-    dot_eqn, mv_outs = None, set()
-    for eqn in body.eqns:
-        if eqn.primitive.name != "optimization_barrier":
-            continue
-        if eqn.outvars[0].aval.shape[:1] == (11,):
-            dot_eqn = eqn
-        else:
-            mv_outs.update(eqn.outvars)
-    assert dot_eqn is not None, "fused (11, m) phase not found in step body"
-    assert dot_eqn.invars[0].aval.shape == (11, m)
-    assert mv_outs, "block matvec tag not found in step body"
-
-    needed = {v for v in dot_eqn.invars
-              if not isinstance(v, jax.core.Literal)}
-    for eqn in reversed(body.eqns):
-        if eqn is dot_eqn:
-            continue
-        if any(ov in needed for ov in eqn.outvars):
-            needed |= {v for v in eqn.invars
-                       if not isinstance(v, jax.core.Literal)}
-    assert not (mv_outs & needed), (
+    spec = BindingSpec(method="p-bicgsafe", substrate=str(substrate),
+                      binding="open_loop", guard=True, m=m,
+                      guard_effective=True)
+    tb = trace_fn(lambda st: step_chunk(
+        bmv, st, 8, config=cfg, dot_reduce=tag_reduce, substrate=sub),
+        state, spec=spec)
+    assert tb.body is not None
+    reds = tb.reduce_eqns()
+    assert len(reds) == 1, "fused (11, m) phase not found in step body"
+    assert reds[0].invars[0].aval.shape == (11, m)
+    edge, detail, _ = reduction_consumes_matvec(tb)
+    assert not edge, (
         "the guarded fused reduction must keep NO dependency edge to "
-        "the in-flight block matvec (health rows ride the same overlap)")
+        f"the in-flight block matvec (health rows ride the overlap): "
+        f"{detail}")
 
 
 @pytest.mark.slow

@@ -10,7 +10,7 @@ The engine multiplexes heterogeneous requests onto one resident
 * communication — the engine's step program issues exactly ONE
   ``dot_reduce`` per iteration with NO dependency edge from the fused
   (9, m) reduction to the in-flight block matvec, on both substrates
-  (jaxpr probes via tests/_jaxpr_utils.py);
+  (contract probes via repro.analysis);
 * caching — re-registering an operator with equal content reuses the
   built preconditioner AND the compiled step programs (fingerprint
   cache).
@@ -21,7 +21,9 @@ import numpy as np
 import pytest
 from jax import lax
 
-from _jaxpr_utils import find_while_body as _find_while_body
+from repro.analysis import (BindingSpec, find_while_body as _find_while_body,
+                            reduction_consumes_matvec, tag_matvec,
+                            tag_reduce, trace_fn)
 from repro.core import SolverConfig, solve_batched
 from repro.core import matrices as M
 from repro.core._common import SyncCounter
@@ -192,48 +194,31 @@ def test_engine_step_overlap_edge(x64, substrate, precond):
     m = 3
     B = jnp.stack([b, 0.5 * b, b + 1.0], axis=1)
 
-    # the engine's composed block matvec (M^{-1} ∘ A), tagged like
-    # test_substrate_parity._reduction_sees_matvec does
+    # the engine's composed block matvec (M^{-1} ∘ A), tagged with the
+    # repro.analysis probe tags
     base = jax.vmap(op.matvec, in_axes=1, out_axes=1)
+    tagged = tag_matvec(base)
     pc = resolve_precond(precond, op)
     if pc is not None:
         papply = sub.as_precond_apply(pc)
-        bmv = lambda X: papply(lax.optimization_barrier(base(X)))  # noqa
+        bmv = lambda X: papply(tagged(X))  # noqa: E731
         Bp = papply(B)
     else:
-        bmv = lambda X: lax.optimization_barrier(base(X))  # noqa: E731
-        Bp = B
-    spy = lax.optimization_barrier
+        bmv, Bp = tagged, B
 
     state = init_state(bmv, Bp, substrate=sub)
-    jaxpr = jax.make_jaxpr(lambda st: step_chunk(
-        bmv, st, 8, dot_reduce=spy, substrate=sub))(state)
-    body = _find_while_body(jaxpr.jaxpr)
-    assert body is not None
-
-    dot_eqn, mv_outs = None, set()
-    for eqn in body.eqns:
-        if eqn.primitive.name != "optimization_barrier":
-            continue
-        if eqn.outvars[0].aval.shape[:1] == (9,):
-            dot_eqn = eqn
-        else:
-            mv_outs.update(eqn.outvars)
-    assert dot_eqn is not None, "fused (9, m) phase not found in step body"
-    assert dot_eqn.invars[0].aval.shape == (9, m)
-    assert mv_outs, "block matvec tag not found in step body"
-
-    needed = {v for v in dot_eqn.invars
-              if not isinstance(v, jax.core.Literal)}
-    for eqn in reversed(body.eqns):
-        if eqn is dot_eqn:
-            continue
-        if any(ov in needed for ov in eqn.outvars):
-            needed |= {v for v in eqn.invars
-                       if not isinstance(v, jax.core.Literal)}
-    assert not (mv_outs & needed), (
+    spec = BindingSpec(method="p-bicgsafe", substrate=str(substrate),
+                      binding="open_loop", precond=precond, m=m)
+    tb = trace_fn(lambda st: step_chunk(
+        bmv, st, 8, dot_reduce=tag_reduce, substrate=sub), state, spec=spec)
+    assert tb.body is not None
+    reds = tb.reduce_eqns()
+    assert len(reds) == 1, "fused (9, m) phase not found in step body"
+    assert reds[0].invars[0].aval.shape == (9, m)
+    edge, detail, _ = reduction_consumes_matvec(tb)
+    assert not edge, (
         "the engine step's fused reduction must keep NO dependency edge "
-        "to the in-flight block matvec (comm-hiding under load)")
+        f"to the in-flight block matvec (comm-hiding under load): {detail}")
 
 
 def test_engine_kernel_backed_assertion(x64):

@@ -6,10 +6,12 @@ import numpy as np
 import pytest
 from jax import lax
 
-from _jaxpr_utils import (count_prim as _count_prim,
-                          find_prim_eqn as _find_prim_eqn,
-                          find_while_body as _find_while_body)
 from conftest import enable_x64
+from repro.analysis import (BindingSpec, count_prim as _count_prim,
+                            find_prim_eqn as _find_prim_eqn,
+                            find_while_body as _find_while_body,
+                            reduction_consumes_matvec, tag_matvec,
+                            tag_reduce, trace_fn)
 from repro.core import (SOLVERS, SolverConfig, get_substrate, pbicgsafe_solve,
                         solve_batched, ssbicgsafe2_solve)
 from repro.core import matrices as M
@@ -120,33 +122,28 @@ def test_sync_count_per_substrate(x64, substrate, sname, per_iter):
     assert counter.calls == 1 + per_iter
 
 
-def _while_body(jaxpr):
-    body = _find_while_body(jaxpr)
-    assert body is not None, "no while_loop in solver jaxpr"
-    return body
-
-
 def _reduction_sees_matvec(solve, op, b, substrate, precond=None) -> bool:
-    """Structural overlap probe (bench_overlap-style, single process).
+    """Structural overlap probe via the repro.analysis contract core.
 
-    The matvec output and the fused-dot partials are both tagged with
-    ``optimization_barrier``; in the while-body jaxpr we then check whether
-    the reduction's tag is transitively computed from the matvec's tag.
-    False == no dependency edge == the reduction may overlap the matvec.
+    The matvec output and the fused-dot partials are tagged
+    (``tag_matvec`` / ``tag_reduce``); ``reduction_consumes_matvec``
+    then walks the while-body jaxpr for a path from the reduction back
+    to the matvec tag.  False == no dependency edge == the reduction
+    may overlap the matvec.
 
     Works for the single-RHS solvers ((9,) partials) and for
     ``solve_batched`` ((9, m) partial blocks; ``b`` is then (n, m), and
     the tag wraps the block matvec — optimization_barrier has no vmap
     batching rule, so the barrier must sit outside the column lift).
     """
-    spy = lax.optimization_barrier
     if b.ndim == 2:
-        base = jax.vmap(op.matvec, in_axes=1, out_axes=1)
-        mv = lambda x: lax.optimization_barrier(base(x))   # noqa: E731
+        mv = tag_matvec(jax.vmap(op.matvec, in_axes=1, out_axes=1))
         solve_kw = {"blocked": True}
+        binding = "batched"
     else:
-        mv = lambda x: lax.optimization_barrier(op.matvec(x))  # noqa: E731
+        mv = tag_matvec(op.matvec)
         solve_kw = {}
+        binding = "single"
 
     if precond is not None:
         # instances only: the probe hands the solver a tagged CALLABLE,
@@ -155,31 +152,13 @@ def _reduction_sees_matvec(solve, op, b, substrate, precond=None) -> bool:
         # still captures any edge to the in-flight precond+matvec (the
         # apply is strictly downstream of the tag).
         solve_kw["precond"] = precond
-    jaxpr = jax.make_jaxpr(lambda bb: solve(
-        mv, bb, config=SolverConfig(maxiter=10), dot_reduce=spy,
-        substrate=substrate, **solve_kw))(b)
-    body = _while_body(jaxpr.jaxpr)
-
-    dot_eqn, mv_outs = None, set()
-    for eqn in body.eqns:
-        if eqn.primitive.name != "optimization_barrier":
-            continue
-        if eqn.outvars[0].aval.shape[:1] == (9,):
-            dot_eqn = eqn
-        else:
-            mv_outs.update(eqn.outvars)
-    assert dot_eqn is not None, "fused 9-dot phase not found in loop body"
-    assert mv_outs, "matvec tag not found in loop body"
-
-    needed = {v for v in dot_eqn.invars if hasattr(v, "aval")
-              and not isinstance(v, jax.core.Literal)}
-    for eqn in reversed(body.eqns):
-        if eqn is dot_eqn:
-            continue
-        if any(ov in needed for ov in eqn.outvars):
-            needed |= {v for v in eqn.invars
-                       if not isinstance(v, jax.core.Literal)}
-    return bool(mv_outs & needed)
+    spec = BindingSpec(method="probe", substrate=str(substrate),
+                      binding=binding)
+    tb = trace_fn(lambda bb: solve(
+        mv, bb, config=SolverConfig(maxiter=10), dot_reduce=tag_reduce,
+        substrate=substrate, **solve_kw), b, spec=spec)
+    edge, _, _ = reduction_consumes_matvec(tb)
+    return edge
 
 
 @pytest.mark.parametrize("substrate", ["jnp", "pallas"])
@@ -639,47 +618,28 @@ def test_solve_batched_bitwise_pre_refactor_regression(x64, prob):
 
 def _session_reduction_sees_matvec(method, op, b, substrate) -> bool:
     """The overlap probe of _reduction_sees_matvec, through a bound
-    session: tag the matvec and the fused-dot partials with
-    optimization_barrier, then walk the while-body (inside the session's
-    jitted program — find_while_body recurses through pjit) for a path
-    from the reduction back to the matvec tag."""
+    session: tag the matvec and the fused-dot partials
+    (repro.analysis tags), then walk the while-body (inside the
+    session's jitted program — find_while_body recurses through pjit)
+    for a path from the reduction back to the matvec tag."""
     import repro
-    spy = lax.optimization_barrier
     if b.ndim == 2:
-        base = jax.vmap(op.matvec, in_axes=1, out_axes=1)
-        mv = lambda x: lax.optimization_barrier(base(x))   # noqa: E731
+        mv = tag_matvec(jax.vmap(op.matvec, in_axes=1, out_axes=1))
         session = repro.make_solver(method, mv, substrate=substrate,
                                     config=SolverConfig(maxiter=10),
-                                    dot_reduce=spy, blocked=True)
-        jaxpr = jax.make_jaxpr(lambda bb: session.solve_many(bb))(b)
+                                    dot_reduce=tag_reduce, blocked=True)
+        run, binding = (lambda bb: session.solve_many(bb)), "batched"
     else:
-        mv = lambda x: lax.optimization_barrier(op.matvec(x))  # noqa: E731
+        mv = tag_matvec(op.matvec)
         session = repro.make_solver(method, mv, substrate=substrate,
                                     config=SolverConfig(maxiter=10),
-                                    dot_reduce=spy)
-        jaxpr = jax.make_jaxpr(lambda bb: session.solve(bb))(b)
-    body = _while_body(jaxpr.jaxpr)
-
-    dot_eqn, mv_outs = None, set()
-    for eqn in body.eqns:
-        if eqn.primitive.name != "optimization_barrier":
-            continue
-        if eqn.outvars[0].aval.shape[:1] == (9,):
-            dot_eqn = eqn
-        else:
-            mv_outs.update(eqn.outvars)
-    assert dot_eqn is not None, "fused 9-dot phase not found in loop body"
-    assert mv_outs, "matvec tag not found in loop body"
-
-    needed = {v for v in dot_eqn.invars if hasattr(v, "aval")
-              and not isinstance(v, jax.core.Literal)}
-    for eqn in reversed(body.eqns):
-        if eqn is dot_eqn:
-            continue
-        if any(ov in needed for ov in eqn.outvars):
-            needed |= {v for v in eqn.invars
-                       if not isinstance(v, jax.core.Literal)}
-    return bool(mv_outs & needed)
+                                    dot_reduce=tag_reduce)
+        run, binding = (lambda bb: session.solve(bb)), "single"
+    spec = BindingSpec(method=method, substrate=str(substrate),
+                      binding=binding)
+    tb = trace_fn(run, b, spec=spec)
+    edge, _, _ = reduction_consumes_matvec(tb)
+    return edge
 
 
 @pytest.mark.parametrize("substrate", ["jnp", "pallas"])

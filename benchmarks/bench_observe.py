@@ -1,0 +1,140 @@
+"""Observability overhead: traced + metered solves vs. bare solves.
+
+The observe layer's contract is "zero extra synchronizations": the
+iteration-trace ring is written inside the loop body from values the
+iteration already computed (no reduction, no edge to the in-flight
+matvec — contract-verified in tests/test_observe.py), spans and metrics
+touch only the host side.  This bench pins the price of that contract:
+
+* session — ``solver.solve(b, trace=True)`` (full-maxiter ring) vs. the
+  same warm session's bare ``solve(b)``; measured warm, best-of-k, so
+  the gap is the ring write + the one extra buffer in the result, not
+  compilation.
+* engine — a saturated engine burst with ``ServiceConfig.trace_cap``
+  set (per-request trace harvest riding the retirement read, spans +
+  metrics live) vs. the identical burst untraced.
+
+Asserted: both ratios <= 1.05 (the 5% budget the issue sets).
+
+Artifact: experiments/bench_observe.json.
+
+  PYTHONPATH=src python -m benchmarks.run --only observe
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from .common import fmt_table, write_json
+
+jax.config.update("jax_enable_x64", True)
+
+#: wall-time ratio budget for full observability vs. bare
+BUDGET = 1.05
+
+
+def _best(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _session_overhead(quick: bool):
+    import repro
+    from repro.core import SolverConfig
+    from repro.core import matrices as M
+
+    # sized so the iteration loop dominates dispatch (same rationale as
+    # bench_robustness): tiny problems measure python, not the ring
+    nx = 16 if quick else 20
+    repeats = 3 if quick else 5
+    op, b, _ = M.convection_diffusion(nx, peclet=1.0)
+    maxiter = 400
+    solver = repro.make_solver(
+        "p-bicgsafe", op, config=SolverConfig(tol=1e-8, maxiter=maxiter))
+
+    jax.block_until_ready(solver.solve(b).x)              # warm bare
+    jax.block_until_ready(solver.solve(b, trace=True).x)  # warm traced
+    t_bare = _best(lambda: solver.solve(b).x, repeats)
+    t_traced = _best(lambda: solver.solve(b, trace=True).x, repeats)
+    ratio = t_traced / t_bare
+    return dict(n=op.shape[0], maxiter=maxiter,
+                t_bare_s=t_bare, t_traced_s=t_traced,
+                overhead_ratio=ratio, overhead_pct=100.0 * (ratio - 1.0))
+
+
+def _engine_overhead(quick: bool):
+    from repro.core import matrices as M
+    from repro.service import ServiceConfig, SolveEngine
+
+    nx = 8
+    n_req = 16 if quick else 48
+    repeats = 2 if quick else 3
+    op, b, _ = M.convection_diffusion(nx, peclet=1.0)
+    rng = np.random.default_rng(7)
+    rhs = rng.standard_normal((op.shape[0], n_req))
+
+    def burst(trace_cap: int) -> float:
+        scfg = ServiceConfig(max_batch=8, chunk=12, tol=1e-8,
+                             maxiter=2000, trace_cap=trace_cap)
+        eng = SolveEngine(scfg, clock=time.perf_counter)
+        name = eng.register(op)
+        for j in range(scfg.max_batch + 1):       # warm all programs
+            eng.submit(name, rhs[:, j % n_req], tol=1e-6)
+        eng.run()
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for j in range(n_req):
+                eng.submit(name, rhs[:, j])
+            results = eng.run()
+            best = min(best, time.perf_counter() - t0)
+            assert len(results) == n_req
+            assert all((r.trace is not None) == bool(trace_cap)
+                       for r in results)
+        return best
+
+    t_bare = burst(0)
+    t_traced = burst(128)
+    ratio = t_traced / t_bare
+    return dict(n=op.shape[0], n_requests=n_req, trace_cap=128,
+                t_bare_s=t_bare, t_traced_s=t_traced,
+                overhead_ratio=ratio, overhead_pct=100.0 * (ratio - 1.0))
+
+
+def run(quick: bool = False):
+    print("\n== bench_observe (tracing + metrics overhead budget) ==")
+    sess = _session_overhead(quick)
+    eng = _engine_overhead(quick)
+    rows = [
+        ["session solve", sess["n"], f"{sess['t_bare_s'] * 1e3:.1f}",
+         f"{sess['t_traced_s'] * 1e3:.1f}",
+         f"{sess['overhead_pct']:+.2f}%"],
+        ["engine burst", eng["n"], f"{eng['t_bare_s'] * 1e3:.1f}",
+         f"{eng['t_traced_s'] * 1e3:.1f}",
+         f"{eng['overhead_pct']:+.2f}%"],
+    ]
+    print(fmt_table(rows, headers=["path", "n", "bare ms", "traced ms",
+                                   "overhead"]))
+    # artifact first, assertion second: a failed budget check should
+    # still leave the measurements on disk for CI to upload
+    path = write_json("bench_observe.json",
+                      dict(budget_ratio=BUDGET, session=sess, engine=eng,
+                           quick=quick))
+    print(f"\nwrote {path}")
+    for name, r in (("session", sess), ("engine", eng)):
+        assert r["overhead_ratio"] <= BUDGET, (
+            f"{name} observability overhead {r['overhead_pct']:.2f}% "
+            f"exceeds the {100 * (BUDGET - 1):.0f}% budget")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

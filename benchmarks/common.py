@@ -3,15 +3,31 @@ from __future__ import annotations
 
 import json
 import time
+from datetime import datetime, timezone
 from pathlib import Path
 
 OUT = Path("experiments")
 
 
 def write_json(name: str, obj):
+    """Write one benchmark artifact under experiments/.
+
+    Every artifact is stamped with a ``schema`` id (derived from the
+    file name: ``repro.benchmarks/<stem>/v1``) and a ``generated_at``
+    UTC timestamp, so downstream tooling (the observe report CLI, CI
+    artifact diffing) can identify and order what it is reading.
+    Payload keys win on collision — a bench that declares its own
+    ``schema`` keeps it.
+    """
     OUT.mkdir(exist_ok=True)
     p = OUT / name
-    p.write_text(json.dumps(obj, indent=2, default=str))
+    stamped = {"schema": f"repro.benchmarks/{p.stem}/v1",
+               "generated_at": datetime.now(timezone.utc).isoformat()}
+    if isinstance(obj, dict):
+        stamped.update(obj)
+    else:
+        stamped["data"] = obj
+    p.write_text(json.dumps(stamped, indent=2, default=str))
     return p
 
 

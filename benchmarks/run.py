@@ -16,6 +16,8 @@
                                             legacy free functions)
   bench_robustness    guarded solves       (clean-path overhead budget +
                                             fault-injection recovery)
+  bench_observe       observability        (trace/metrics overhead
+                                            budget, session + engine)
 
 Artifacts land in experiments/*.json; stdout is the human summary.
 """
@@ -36,12 +38,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_api, bench_convergence, bench_cost, bench_multirhs,
-                   bench_overlap, bench_precond, bench_robustness,
-                   bench_roofline, bench_rr, bench_scaling, bench_service)
+                   bench_observe, bench_overlap, bench_precond,
+                   bench_robustness, bench_roofline, bench_rr,
+                   bench_scaling, bench_service)
 
     benches = {
         "api": bench_api.run,
         "robustness": bench_robustness.run,
+        "observe": bench_observe.run,
         "convergence": bench_convergence.run,
         "rr": bench_rr.run,
         "cost": bench_cost.run,

@@ -20,6 +20,13 @@ hit: the engine's registry consumes the :mod:`repro.api` session cache,
 so the built preconditioner and the compiled step programs are reused —
 even across engines, or with a direct ``repro.make_solver`` of the same
 operator.
+
+The engine serves with ``trace_cap`` set, so every retirement carries a
+per-iteration :class:`repro.observe.ConvergenceTrace` (harvested with
+the one host read the engine already does), and the whole run lands in
+the observe layer: spans are dumped as Chrome trace-event JSON, metrics
+as a Prometheus snapshot, one request's trace as convergence JSON —
+render them with ``python -m repro.observe report``.
 """
 import numpy as np
 
@@ -29,7 +36,10 @@ import jax.numpy as jnp
 jax.config.update("jax_enable_x64", True)
 
 from repro.core import matrices as M          # noqa: E402
+from repro.observe import RECORDER, prometheus  # noqa: E402
 from repro.service import ServiceConfig, SolveEngine  # noqa: E402
+
+OUT = "experiments/observe"
 
 
 def main():
@@ -37,7 +47,8 @@ def main():
     op_b, b_b, _ = M.convection_diffusion(8, peclet=1.0)  # non-symmetric
 
     eng = SolveEngine(ServiceConfig(max_batch=8, chunk=12,
-                                    tol=1e-8, maxiter=2000))
+                                    tol=1e-8, maxiter=2000,
+                                    trace_cap=128))
     eng.register(op_a, name="poisson")
     eng.register(op_b, precond="block_jacobi", name="convdiff")
 
@@ -71,6 +82,19 @@ def main():
     print(f"\n{conv}/{n_req} converged; mean chunks resident "
           f"{chunks:.1f}; every iteration of a resident block is ONE "
           "(9, m) reduction for all its requests")
+
+    # -- dump the observe artifacts for the report CLI -------------------
+    import os
+    os.makedirs(OUT, exist_ok=True)
+    RECORDER.save_chrome_trace(f"{OUT}/spans.trace.json")
+    with open(f"{OUT}/metrics.prom", "w") as fh:
+        fh.write(prometheus())
+    slowest = max(results, key=lambda r: r.iterations)
+    slowest.trace.save(f"{OUT}/convergence.json")
+    print(f"\nslowest request (rid {slowest.rid}): "
+          f"{slowest.trace.summary()}")
+    print(f"observe artifacts in {OUT}/ — render the timeline with:\n"
+          f"  PYTHONPATH=src python -m repro.observe report --dir {OUT}")
 
 
 if __name__ == "__main__":

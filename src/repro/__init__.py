@@ -21,7 +21,9 @@ cache.
 Layers underneath: :mod:`repro.core` (the paper's solvers, operators,
 batched/distributed drivers), :mod:`repro.kernels` (Pallas hot-loop
 kernels), :mod:`repro.precond` (preconditioners inside the overlap
-window), :mod:`repro.service` (continuous batching).  The historical
+window), :mod:`repro.service` (continuous batching),
+:mod:`repro.observe` (zero-sync iteration traces, span timelines,
+metrics — ``solver.solve(b, trace=True)``).  The historical
 free-function entry points keep working as deprecated shims.
 """
 from repro.api import (DistributedSolver, LinearSolver, make_solver,
@@ -29,6 +31,7 @@ from repro.api import (DistributedSolver, LinearSolver, make_solver,
 from repro.core import (SOLVERS, CSROperator, DenseOperator, ELLOperator,
                         Preconditioner, SolveResult, SolverConfig,
                         Stencil7Operator, SUBSTRATES, get_substrate)
+from repro.observe import ConvergenceTrace
 from repro.resilience import GuardedSolver, RecoveryPolicy, SolveStatus
 
 __all__ = [
@@ -42,4 +45,6 @@ __all__ = [
     "SUBSTRATES", "get_substrate",
     # guarded solves (repro.resilience; make_solver(recovery=...))
     "SolveStatus", "RecoveryPolicy", "GuardedSolver",
+    # observability (repro.observe; solve(trace=True))
+    "ConvergenceTrace",
 ]

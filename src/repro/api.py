@@ -65,6 +65,9 @@ from repro.core.multirhs import (init_state, result_from_state,
 from repro.core.substrate import SUBSTRATES, SubstrateLike, get_substrate
 from repro.core.types import (DotReduce, SolveResult, SolverConfig,
                               identity_reduce, per_column)
+from repro.observe import metrics as _metrics
+from repro.observe.spans import span as _span
+from repro.observe.trace import wrap_trace
 from repro.precond.base import (PrecondLike, Preconditioner, resolve_precond,
                                 validate_precond_spec)
 
@@ -256,7 +259,9 @@ class LinearSolver:
         constants, not tracers of whichever trace got there first.
         """
         if not self._precond_built:
-            with jax.ensure_compile_time_eval():
+            with _span("api.precond_build",
+                       spec=str(self.precond_spec)), \
+                    jax.ensure_compile_time_eval():
                 self._precond_val = resolve_precond(self.precond_spec,
                                                     self.operator)
             self._precond_built = True
@@ -366,17 +371,43 @@ class LinearSolver:
     def _program(self, key, build: Callable[[], Callable]) -> Callable:
         fn = self._programs.get(key)
         if fn is None:
-            fn = self._programs[key] = build()
+            with _span("api.program_build", method=self.method,
+                       kind=str(key[0]) if key else ""):
+                fn = self._programs[key] = build()
             self.stats["programs"] += 1
         return fn
 
-    def _derive(self, tol, maxiter) -> SolverConfig:
+    def _mark_trace(self) -> None:
+        """Called from inside each program closure: runs once per actual
+        jit (re)trace — the amortization metric."""
+        self.stats["traces"] += 1
+        _metrics.PROGRAM_TRACES.inc()
+
+    def _derive(self, tol, maxiter, trace=None) -> SolverConfig:
         cfg = self.config
         if tol is not None:
             cfg = dataclasses.replace(cfg, tol=float(tol))
         if maxiter is not None:
             cfg = dataclasses.replace(cfg, maxiter=int(maxiter))
+        if trace is not None:
+            # trace=True -> ring sized to the iteration budget (a full
+            # record); an int -> that capacity; False -> force off
+            cap = cfg.maxiter if trace is True else int(trace)
+            cfg = dataclasses.replace(cfg, trace_cap=cap)
         return cfg
+
+    def _count_solve(self, entry: str) -> None:
+        self.stats["solves"] += 1
+        _metrics.SOLVES.inc(method=self.method, substrate=self.sub.name,
+                            entry=entry)
+
+    @staticmethod
+    def _wrap_trace(res: SolveResult) -> SolveResult:
+        """ConvergenceTrace at the host boundary (no-op when tracing is
+        off — the result is returned as the program produced it)."""
+        if res.trace is None:
+            return res
+        return res._replace(trace=wrap_trace(res.trace))
 
     def _prep(self, B):
         return B if self._papply is None else self._papply(B)
@@ -405,38 +436,45 @@ class LinearSolver:
     # -- single-RHS -------------------------------------------------------
 
     def solve(self, b, x0=None, *, tol=None, maxiter=None,
-              r0_star=None) -> SolveResult:
+              r0_star=None, trace=None) -> SolveResult:
         """Solve A x = b; the compiled program is cached on the session.
 
         ``tol``/``maxiter`` override the bound config (each distinct
         override pair compiles its own program — they are static inside
         the solver loop); ``x0``/``r0_star`` as for the free functions.
+        ``trace=True`` records the per-iteration convergence trace
+        (``SolveResult.trace`` becomes a :class:`repro.observe
+        .ConvergenceTrace`); an int keeps only the last that-many
+        iterations; the solution is bitwise identical either way (the
+        ring buffer is a write-only consumer of values the fused
+        reduction already computes — see :mod:`repro.observe`).
         """
         if self.blocked:
             raise ValueError(
                 "this session wraps a block matvec (blocked=True); "
                 "use solve_many / the open-loop handles")
-        cfg = self._derive(tol, maxiter)
+        cfg = self._derive(tol, maxiter, trace)
         key = ("solve", cfg, x0 is None, r0_star is None)
 
         def build():
             solver = SOLVERS[self.method]
 
             def run(b, x0, r0s):
-                self.stats["traces"] += 1
+                self._mark_trace()
                 with internal_use():
                     return solver(self.operator, b, x0, config=cfg,
                                   r0_star=r0s, dot_reduce=self._dot_reduce,
                                   substrate=self.sub, precond=self.precond)
             return jax.jit(run)
 
-        self.stats["solves"] += 1
-        return self._program(key, build)(jnp.asarray(b), x0, r0_star)
+        self._count_solve("solve")
+        return self._wrap_trace(
+            self._program(key, build)(jnp.asarray(b), x0, r0_star))
 
     # -- multi-RHS --------------------------------------------------------
 
     def solve_many(self, B, X0=None, *, tol=None, maxiter=None,
-                   r0_star=None) -> SolveResult:
+                   r0_star=None, trace=None) -> SolveResult:
         """Solve A X = B for all columns at once (ONE (9, m) reduction
         per iteration).
 
@@ -447,15 +485,18 @@ class LinearSolver:
         ``maxiter`` also re-bounds the compiled loop (one program per
         distinct value); per-column ``maxiter`` vectors are capped by
         ``config.maxiter`` — the loop bound — the same way the
-        service's resident blocks are.
+        service's resident blocks are.  ``trace`` as in :meth:`solve`;
+        the returned :class:`~repro.observe.ConvergenceTrace` is
+        batched (``.column(j)`` for per-column views).
         """
         self._require_pbicgsafe("solve_many")
         B = self._as_block(B)
         m = B.shape[1]
-        cfg = self.config
         if maxiter is not None and np.ndim(maxiter) == 0:
-            cfg = self._derive(None, maxiter)
+            cfg = self._derive(None, maxiter, trace)
             maxiter = None
+        else:
+            cfg = self._derive(None, None, trace)
         tol_col = self._col(tol, m, cfg.tol, B.dtype)
         mit_col = self._col(maxiter, m, cfg.maxiter, jnp.int32,
                             name="maxiter")
@@ -463,7 +504,7 @@ class LinearSolver:
 
         def build():
             def run(B, X0, tolv, mitv, r0s):
-                self.stats["traces"] += 1
+                self._mark_trace()
                 with internal_use():
                     st = init_state(self.block_matvec, self._prep(B), X0,
                                     config=cfg, r0_star=r0s,
@@ -476,8 +517,9 @@ class LinearSolver:
                 return result_from_state(st)
             return jax.jit(run)
 
-        self.stats["solves"] += 1
-        return self._program(key, build)(B, X0, tol_col, mit_col, r0_star)
+        self._count_solve("solve_many")
+        return self._wrap_trace(
+            self._program(key, build)(B, X0, tol_col, mit_col, r0_star))
 
     # -- open-loop handles (what repro.service drives) --------------------
 
@@ -495,7 +537,7 @@ class LinearSolver:
 
         def build():
             def run(B, X0, tolv, mitv, r0s):
-                self.stats["traces"] += 1
+                self._mark_trace()
                 with internal_use():
                     return init_state(self.block_matvec, self._prep(B), X0,
                                       config=self.config, r0_star=r0s,
@@ -513,7 +555,7 @@ class LinearSolver:
 
         def build():
             def run(state, k):
-                self.stats["traces"] += 1
+                self._mark_trace()
                 with internal_use():
                     return step_chunk(self.block_matvec, state, k,
                                       config=self.config,
@@ -537,7 +579,7 @@ class LinearSolver:
 
         def build():
             def run(state, refill, Bn, tolv, mitv, r0s):
-                self.stats["traces"] += 1
+                self._mark_trace()
                 with internal_use():
                     return splice_columns(self.block_matvec, state, refill,
                                           self._prep(Bn), r0_star=r0s,
@@ -563,7 +605,7 @@ class LinearSolver:
 
         def build():
             def run(state, refill, Bn, tolv, mitv, k):
-                self.stats["traces"] += 1
+                self._mark_trace()
                 with internal_use():
                     st = splice_columns(self.block_matvec, state, refill,
                                         self._prep(Bn),
@@ -580,8 +622,15 @@ class LinearSolver:
             state, jnp.asarray(refill), B_new, tol_col, mit_col, k=int(k))
 
     def result(self, state: dict) -> SolveResult:
-        """Package an open-loop state pytree as a :class:`SolveResult`."""
-        return result_from_state(state)
+        """Package an open-loop state pytree as a :class:`SolveResult`.
+
+        Open-loop tracing is config-driven: bind the session with
+        ``SolverConfig(trace_cap=...)`` (or set ``ServiceConfig
+        .trace_cap`` on the engine) and every chunk carries the ring
+        buffer; this wraps it into a batched
+        :class:`~repro.observe.ConvergenceTrace`.
+        """
+        return self._wrap_trace(result_from_state(state))
 
     # -- distributed binding ----------------------------------------------
 
@@ -649,10 +698,16 @@ class DistributedSolver:
             self.session.stats["programs"] += 1
         return fn
 
-    def solve(self, b_grid, *, tol=None, maxiter=None) -> SolveResult:
-        """Sharded single-RHS solve of the bound method on the mesh."""
+    def solve(self, b_grid, *, tol=None, maxiter=None,
+              trace=None) -> SolveResult:
+        """Sharded single-RHS solve of the bound method on the mesh.
+
+        ``trace`` as in :meth:`LinearSolver.solve` — the ring buffer is
+        built from psum-replicated scalars, so tracing adds no
+        collective (still ONE psum per iteration, contract-verified).
+        """
         s = self.session
-        cfg = s._derive(tol, maxiter)
+        cfg = s._derive(tol, maxiter, trace)
 
         def build():
             from repro.core.distributed import build_stencil_solver
@@ -661,14 +716,16 @@ class DistributedSolver:
                 shard_axes=self.shard_axes, config=cfg, substrate=s.sub,
                 precond=s.precond_spec)
 
-        return self._program(("dsolve", cfg), build)(b_grid)
+        s._count_solve("mesh_solve")
+        return s._wrap_trace(self._program(("dsolve", cfg), build)(b_grid))
 
-    def solve_many(self, B_grid, *, tol=None, maxiter=None) -> SolveResult:
+    def solve_many(self, B_grid, *, tol=None, maxiter=None,
+                   trace=None) -> SolveResult:
         """Sharded batched solve: (nx, ny, nz, m) right-hand sides, ONE
         (9, m) psum per iteration independent of m."""
         s = self.session
         s._require_pbicgsafe("on_mesh(...).solve_many")
-        cfg = s._derive(tol, maxiter)
+        cfg = s._derive(tol, maxiter, trace)
 
         def build():
             from repro.core.distributed import build_stencil_solver_batched
@@ -676,7 +733,9 @@ class DistributedSolver:
                 s.operator, self.mesh, shard_axes=self.shard_axes,
                 config=cfg, substrate=s.sub, precond=s.precond_spec)
 
-        return self._program(("dsolve_many", cfg), build)(B_grid)
+        s._count_solve("mesh_solve_many")
+        return s._wrap_trace(
+            self._program(("dsolve_many", cfg), build)(B_grid))
 
 
 # ---------------------------------------------------------------------------
@@ -780,10 +839,14 @@ def make_solver(method: str = "p-bicgsafe", operator=None, *,
         hit = _SESSIONS.get(key)
         if hit is not None:
             _SESSIONS.move_to_end(key)
+            _metrics.SESSION_CACHE.inc(outcome="hit")
             return hit
-    session = LinearSolver(method, operator, precond=precond, substrate=sub,
-                           config=config, dot_reduce=dot_reduce,
-                           blocked=blocked, fingerprint=fingerprint)
+        _metrics.SESSION_CACHE.inc(outcome="miss")
+    with _span("api.bind", method=method, substrate=str(sub_name)):
+        session = LinearSolver(method, operator, precond=precond,
+                               substrate=sub, config=config,
+                               dot_reduce=dot_reduce, blocked=blocked,
+                               fingerprint=fingerprint)
     if key is not None:
         _SESSIONS[key] = session
         while len(_SESSIONS) > _SESSION_CACHE_MAX:

@@ -180,9 +180,12 @@ def build_stencil_solver(solver: Callable,
         return res._replace(x=res.x.reshape(local_shape))
 
     in_specs = P(axes)
+    # the trace ring buffer is built from psum-replicated dot-derived
+    # scalars, so every shard holds the same buffer: replicated specs
     out_specs = SolveResult(
         x=P(axes), iterations=P(), relres=P(), converged=P(),
-        breakdown=P(), residual_history=P(), status=P())
+        breakdown=P(), residual_history=P(), status=P(),
+        trace={"buffer": P(), "steps": P()} if config.trace_cap else None)
 
     fn = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
                           out_specs=out_specs, check_vma=False)
@@ -277,9 +280,12 @@ def build_stencil_solver_batched(op: Stencil7Operator,
         return res._replace(x=res.x.reshape(*local_shape, m))
 
     in_specs = P(axes)
+    # the trace ring buffer is built from psum-replicated dot-derived
+    # scalars, so every shard holds the same buffer: replicated specs
     out_specs = SolveResult(
         x=P(axes), iterations=P(), relres=P(), converged=P(),
-        breakdown=P(), residual_history=P(), status=P())
+        breakdown=P(), residual_history=P(), status=P(),
+        trace={"buffer": P(), "steps": P()} if config.trace_cap else None)
 
     sharded = compat.shard_map(shard_fn, mesh=mesh, in_specs=(in_specs,),
                                out_specs=out_specs, check_vma=False)

@@ -65,7 +65,7 @@ from ._common import (bicgsafe_breakdown_code, bicgsafe_coefficients,
                       pipelined_recurrence_tail)
 from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolveStatus, SolverConfig,
-                    identity_reduce, per_column)
+                    identity_reduce, per_column, trace_init, trace_record)
 
 #: Per-column health/monitor fields carried by a GUARDED state pytree
 #: (``SolverConfig.guard``); their presence marks a state as guarded.
@@ -198,6 +198,8 @@ def init_state(bmv: Callable,
         hist=hist)
     if config.guard:
         st.update(_guard_init(m, norm_r0.dtype, conv0))
+    if config.trace_cap:
+        st["trace"] = trace_init(config, norm_r0.dtype, m)
     return st
 
 
@@ -287,6 +289,12 @@ def splice_columns(bmv: Callable,
     out["col_maxiter"] = sca(maxiter_col, state["col_maxiter"])
     if state["hist"].shape[0]:
         out["hist"] = jnp.where(col, jnp.nan, state["hist"])
+    if "trace" in state:
+        # refilled columns start a fresh trajectory: NaN their trace
+        # rows (same pattern as hist); the ring keeps recording from
+        # the CURRENT global slot, which the harvest layer handles
+        out["trace"] = jnp.where(refill[None, None, :], jnp.nan,
+                                 state["trace"])
     if "status" in state:                        # guarded state: fresh
         fresh = _guard_init(m, state["norm_r0"].dtype, conv_new)
         for k in GUARD_FIELDS:
@@ -456,6 +464,34 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
                        stall=stall, best_relres=best, stagnant=stagnant,
                        replacements=st["replacements"],
                        restarts=st["restarts"])
+
+        if config.trace_cap:
+            # Write-only iteration trace: every channel is a value this
+            # iteration already computed (the denominators re-express
+            # safe_div inputs — XLA CSEs them; the first-iteration
+            # omega pivot is ``a``, matching bicgsafe_coefficients).
+            # No reduction, no edge to As/Aw — contract-verified.
+            a_d, b_d, c_d = dots[0], dots[1], dots[2]
+            g_d, h_d = dots[6], dots[7]
+            first = st["iterations"] == 0
+            if guard:
+                drift_ch, status_ch = out["drift"], out["status"]
+            else:
+                drift_ch = jnp.zeros_like(relres_out)
+                status_ch = jnp.where(
+                    out["converged"], SolveStatus.CONVERGED.value,
+                    jnp.where(out["breakdown"],
+                              SolveStatus.BREAKDOWN.value,
+                              SolveStatus.RUNNING.value))
+            # iteration channel = COMPLETED updates when relres was
+            # measured (pre-advance): the terminal detection row keeps
+            # the final count and the CONVERGED/BREAKDOWN status.
+            out["trace"] = trace_record(st["trace"], st["i"], (
+                st["iterations"], relres_out,
+                st["zeta"] * st["f"],
+                g_d + beta * h_d,
+                jnp.where(first, a_d, a_d * b_d - c_d * c_d),
+                drift_ch, status_ch))
         return out
 
     return body
@@ -521,9 +557,12 @@ def result_from_state(state: dict) -> SolveResult:
             active_columns(state), SolveStatus.RUNNING.value,
             classify_status(state["converged"], state["breakdown"],
                             state["relres"]))
+    trace = None
+    if "trace" in state:
+        trace = {"buffer": state["trace"], "steps": state["i"]}
     return SolveResult(state["x"], state["iterations"], state["relres"],
                        state["converged"], state["breakdown"],
-                       state["hist"], sts.astype(jnp.int32))
+                       state["hist"], sts.astype(jnp.int32), trace)
 
 
 def solve_batched(matvec: Callable,

@@ -32,8 +32,9 @@ from ..precond.base import PrecondLike, preconditioned_system
 from ._common import (bicgsafe_coefficients, init_guess,
                       pipelined_recurrence_tail, tree_select)
 from .substrate import SubstrateLike, get_substrate
-from .types import (DotReduce, SolveResult, SolverConfig, classify_status,
-                    history_init, history_update, identity_reduce)
+from .types import (DotReduce, SolveResult, SolveStatus, SolverConfig,
+                    classify_status, history_init, history_update,
+                    identity_reduce, trace_init, trace_record)
 
 
 def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
@@ -68,6 +69,11 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
         relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
         converged=conv0, breakdown=jnp.zeros((), bool),
         hist=hist)
+    if config.trace_cap:
+        state["trace"] = trace_init(config, norm_r0.dtype)
+        # rows written (the terminal detection writes one WITHOUT
+        # advancing i, so i alone undercounts by one on converge)
+        state["trace_steps"] = jnp.zeros((), jnp.int32)
 
     def cond(st):
         return (~st["converged"]) & (~st["breakdown"]) & (st["i"] < config.maxiter)
@@ -141,13 +147,44 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
         stopped = dict(st)
         stopped.update(relres=relres, converged=done, breakdown=bad & ~done,
                        hist=hist_i)
+        if config.trace_cap:
+            trace_i = _trace_row(st, dots, beta, relres, done, bad, config)
+            new["trace"] = stopped["trace"] = trace_i
+            new["trace_steps"] = stopped["trace_steps"] = \
+                st["trace_steps"] + 1
         return tree_select(done | bad, stopped, new)
 
     st = jax.lax.while_loop(cond, body, state)
+    trace = {"buffer": st["trace"], "steps": st["trace_steps"]} \
+        if config.trace_cap else None
     return SolveResult(st["x"], st["i"], st["relres"], st["converged"],
                        st["breakdown"], st["hist"],
                        classify_status(st["converged"], st["breakdown"],
-                                       st["relres"]))
+                                       st["relres"]), trace)
+
+
+def _trace_row(st, dots, beta, relres, done, bad, config):
+    """Record one single-RHS iteration into the trace ring buffer — all
+    channels re-express values the fused phase already computed (XLA
+    CSEs the denominators with ``bicgsafe_coefficients``); write-only,
+    so the emitted loop math is untouched.  Shared with ssBiCGSafe2.
+
+    The iteration channel is the number of COMPLETED updates when
+    relres was measured (the same indexing ``residual_history`` uses):
+    the first row is ``(0, 1.0, ...)`` and the terminal row is
+    ``(iterations, final relres, ..., CONVERGED/BREAKDOWN)``.
+    """
+    a_d, b_d, c_d, g_d, h_d = (dots[k] for k in (0, 1, 2, 6, 7))
+    first = st["i"] == 0
+    status_ch = jnp.where(done, SolveStatus.CONVERGED.value,
+                          jnp.where(bad, SolveStatus.BREAKDOWN.value,
+                                    SolveStatus.RUNNING.value))
+    return trace_record(st["trace"], st["i"], (
+        st["i"], relres,
+        st["zeta"] * st["f"],
+        g_d + beta * h_d,
+        jnp.where(first, a_d, a_d * b_d - c_d * c_d),
+        jnp.zeros_like(relres), status_ch))
 
 
 def pbicgsafe_solve(matvec: Callable,

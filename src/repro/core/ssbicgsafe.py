@@ -16,7 +16,8 @@ from ..precond.base import PrecondLike, preconditioned_system
 from ._common import bicgsafe_coefficients, init_guess, tree_select
 from .substrate import SubstrateLike, get_substrate
 from .types import (DotReduce, SolveResult, SolverConfig, classify_status,
-                    history_init, history_update, identity_reduce)
+                    history_init, history_update, identity_reduce,
+                    trace_init)
 
 
 def ssbicgsafe2_solve(matvec: Callable,
@@ -55,6 +56,9 @@ def ssbicgsafe2_solve(matvec: Callable,
         relres=jnp.where(conv0, 0.0, 1.0).astype(norm_r0.dtype),
         converged=conv0, breakdown=jnp.zeros((), bool),
         hist=hist)
+    if config.trace_cap:
+        state["trace"] = trace_init(config, norm_r0.dtype)
+        state["trace_steps"] = jnp.zeros((), jnp.int32)
 
     def cond(st):
         return (~st["converged"]) & (~st["breakdown"]) & (st["i"] < config.maxiter)
@@ -90,10 +94,18 @@ def ssbicgsafe2_solve(matvec: Callable,
         stopped = dict(st)
         stopped.update(relres=relres, converged=done, breakdown=bad & ~done,
                        hist=hist_i)
+        if config.trace_cap:
+            from .pipelined_bicgsafe import _trace_row
+            trace_i = _trace_row(st, dots, beta, relres, done, bad, config)
+            new["trace"] = stopped["trace"] = trace_i
+            new["trace_steps"] = stopped["trace_steps"] = \
+                st["trace_steps"] + 1
         return tree_select(done | bad, stopped, new)
 
     st = jax.lax.while_loop(cond, body, state)
+    trace = {"buffer": st["trace"], "steps": st["trace_steps"]} \
+        if config.trace_cap else None
     return SolveResult(st["x"], st["i"], st["relres"], st["converged"],
                        st["breakdown"], st["hist"],
                        classify_status(st["converged"], st["breakdown"],
-                                       st["relres"]))
+                                       st["relres"]), trace)

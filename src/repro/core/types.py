@@ -78,6 +78,19 @@ def classify_status(converged, breakdown, relres) -> jax.Array:
     return s.astype(jnp.int32)
 
 
+#: Channel layout of the on-device iteration-trace ring buffer
+#: (``SolverConfig.trace_cap``; see :mod:`repro.observe`).  Every channel
+#: is a value the fused (9/11, m) reduction phase ALREADY computes — the
+#: trace is a write-only consumer, so recording adds zero
+#: synchronizations and no dependency edge to the in-flight matvec.
+#: NOTE: the channel count must never equal
+#: :data:`repro.analysis.trace.REDUCE_MARK_DIM` (13) or the fused
+#: leading dims 9/11 — those shapes identify reduction phases in the
+#: contract passes.
+TRACE_CHANNELS = ("iteration", "relres", "rho_denom", "alpha_denom",
+                  "omega_denom", "drift", "status")
+
+
 class SolveResult(NamedTuple):
     """Result of an iterative solve.
 
@@ -95,6 +108,13 @@ class SolveResult(NamedTuple):
         or (m,) per column for batched solves).  Every solver fills it;
         the default ``None`` only exists so externally constructed
         results (and the pre-status pickles/tests) stay valid.
+      trace: iteration-trace payload when ``SolverConfig.trace_cap`` was
+        set — inside jit a ``{"buffer": (cap, C[, m]), "steps": int32}``
+        dict (the raw ring buffer; channels per
+        :data:`TRACE_CHANNELS`); the session layer wraps it into a
+        :class:`repro.observe.ConvergenceTrace` at the host boundary.
+        ``None`` when tracing is off (the default) or the solver does
+        not support it.
     """
 
     x: jax.Array
@@ -104,6 +124,7 @@ class SolveResult(NamedTuple):
     breakdown: jax.Array
     residual_history: jax.Array
     status: Any = None
+    trace: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +157,16 @@ class SolverConfig:
         corrupt the *convergence decision* itself, which is when
         residual replacement pays.  0 → 1.0 (replace once the bound
         reaches the absolute tolerance).
+      trace_cap: capacity of the on-device iteration-trace ring buffer
+        (0 — the default — disables tracing; the emitted program is
+        bit-for-bit the untraced one).  When set, the loop state carries
+        a ``(trace_cap, len(TRACE_CHANNELS)[, m])`` buffer recording
+        per-iteration scalars the fused reduction already computes
+        (relres, the rho/alpha/omega denominators, the Cools drift
+        bound, status) — write-only, zero extra synchronizations, no
+        new dependency edge (contract-verified; see
+        :mod:`repro.observe`).  Iterations past the cap wrap around:
+        the buffer keeps the LAST ``trace_cap`` iterations.
     """
 
     tol: float = 1e-8
@@ -147,6 +178,7 @@ class SolverConfig:
     guard: bool = False
     stagnation_window: int = 0
     drift_scale: float = 0.0  # 0 → 1.0 (bound reaches the abs tolerance)
+    trace_cap: int = 0  # 0 → no iteration tracing
 
     def breakdown_threshold(self, dtype) -> float:
         if self.breakdown_eps:
@@ -204,3 +236,26 @@ def history_update(hist: jax.Array, i: jax.Array, relres: jax.Array,
     if cfg.record_history:
         return hist.at[i].set(relres.astype(hist.dtype))
     return hist
+
+
+def trace_init(cfg: SolverConfig, rdtype, m: Optional[int] = None
+               ) -> jax.Array:
+    """Fresh NaN-filled iteration-trace ring buffer: ``(cap, C)`` for a
+    single-RHS solve, ``(cap, C, m)`` batched (C = len(TRACE_CHANNELS)).
+    Call only when ``cfg.trace_cap > 0``."""
+    shape = (cfg.trace_cap, len(TRACE_CHANNELS))
+    if m is not None:
+        shape += (m,)
+    return jnp.full(shape, jnp.nan, rdtype)
+
+
+def trace_record(buf: jax.Array, i: jax.Array, channels) -> jax.Array:
+    """Write one stacked channel row at ring slot ``i % cap``.
+
+    ``channels`` is a sequence matching :data:`TRACE_CHANNELS`; each
+    entry is a scalar (single-RHS) or (m,) vector.  Pure data movement
+    of values the iteration already computed — no reductions, so the
+    contract passes see nothing new.
+    """
+    row = jnp.stack([jnp.asarray(c).astype(buf.dtype) for c in channels])
+    return buf.at[jnp.mod(i, buf.shape[0])].set(row)

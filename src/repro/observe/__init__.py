@@ -1,0 +1,54 @@
+"""repro.observe — runtime observability for the solver stack.
+
+Three legs, one invariant.  The invariant is the paper's: **zero extra
+synchronizations and no new dependency edge to the in-flight matvec**.
+Everything this package records is either (a) a value the fused
+(9/11, m) reduction phase already computes, written into an on-device
+ring buffer (write-only — nothing feeds back into the iteration), or
+(b) host-side bookkeeping around program dispatch that never touches
+device values on the hot path.  The existing :mod:`repro.analysis`
+contract passes run unchanged on observed bindings, and
+tests/test_observe.py asserts traced solves are **bitwise identical**
+to untraced ones.
+
+The legs:
+
+* **Iteration traces** — ``SolverConfig.trace_cap`` threads a
+  ``(cap, C[, m])`` ring buffer through the solver loop state recording
+  per-iteration scalars (relres, the rho/alpha/omega coefficient
+  denominators, the Cools drift bound, status); surfaced as
+  ``session.solve(..., trace=True) -> SolveResult.trace``, a typed
+  :class:`ConvergenceTrace`.  The service engine harvests per-column
+  traces at chunk boundaries with the ONE host read it already does.
+* **Host spans** — :func:`span` context-manager spans (bind, precond
+  build, program build, chunk dispatch, splice, retire, re-enqueue)
+  recorded by the module :data:`RECORDER`, each also entering a
+  ``jax.profiler.TraceAnnotation`` so device timelines align; exported
+  as Chrome trace-event JSON (:meth:`SpanRecorder.chrome_trace`)
+  loadable in Perfetto.
+* **Metrics** — a process-local :class:`MetricsRegistry`
+  (:data:`REGISTRY`) of counters/gauges/histograms with Prometheus text
+  exposition (:func:`prometheus`) and a JSON snapshot
+  (:func:`snapshot`), wired into :mod:`repro.api`,
+  :mod:`repro.service.engine` and the guarded solve path.
+
+``python -m repro.observe smoke`` writes a full artifact set
+(trace-event JSON, Prometheus text, metrics + convergence JSON) under
+``experiments/observe/``; ``python -m repro.observe report`` renders a
+solve/engine timeline and convergence summary from those artifacts.
+"""
+from __future__ import annotations
+
+from .clock import Clock, SYSTEM_CLOCK, TickingClock
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
+                      prometheus, snapshot)
+from .spans import RECORDER, Span, SpanRecorder, span
+from .trace import ConvergenceTrace, wrap_trace
+
+__all__ = [
+    "Clock", "SYSTEM_CLOCK", "TickingClock",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "prometheus", "snapshot",
+    "RECORDER", "Span", "SpanRecorder", "span",
+    "ConvergenceTrace", "wrap_trace",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.observe`` — see :mod:`repro.observe.report`."""
+import sys
+
+from .report import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.types import (SolveResult, SolveStatus, SolverConfig,
                               identity_reduce, per_column)
+from repro.observe import metrics as _metrics
 
 from .inject import SimulatedKernelFailure
 from .policy import RecoveryPolicy
@@ -117,9 +118,10 @@ class GuardedSolver:
         hist = res.residual_history
         if hist.ndim == 2:
             hist = hist[:, 0]
+        trace = res.trace.column(0) if res.trace is not None else None
         return SolveResult(res.x[:, 0], res.iterations[0], res.relres[0],
                            res.converged[0], res.breakdown[0], hist,
-                           res.status[0])
+                           res.status[0], trace)
 
     def solve_many(self, B, X0=None, *, tol=None, maxiter=None,
                    r0_star=None) -> SolveResult:
@@ -209,6 +211,7 @@ class GuardedSolver:
     # -- internals --------------------------------------------------------
 
     def _log(self, event: str, chunk: int, mask_or_info) -> None:
+        _metrics.RECOVERY_ACTIONS.inc(action=event)
         info = mask_or_info
         if isinstance(info, np.ndarray):
             info = [int(j) for j in np.nonzero(info)[0]]
@@ -307,7 +310,7 @@ class GuardedSolver:
         return SolveResult(jnp.asarray(x), jnp.asarray(iters),
                            jnp.asarray(relres), jnp.asarray(conv),
                            jnp.asarray(brk), res.residual_history,
-                           jnp.asarray(status.astype(np.int32)))
+                           jnp.asarray(status.astype(np.int32)), res.trace)
 
 
 def guarded_config(config: SolverConfig,

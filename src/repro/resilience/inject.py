@@ -126,24 +126,11 @@ def orthogonal_shadow(r0) -> jnp.ndarray:
     return jnp.where(use_alt, alt, shadow)
 
 
-class TickingClock:
-    """Virtual monotonic clock: advances ``dt`` per call.
-
-    Inject as ``SolveEngine(..., clock=TickingClock(dt))`` to create
-    deterministic deadline pressure — every engine clock read (submit,
-    admission, retirement) advances time, no sleeps involved.
-    """
-
-    def __init__(self, dt: float = 0.0, t0: float = 0.0):
-        self.t = float(t0)
-        self.dt = float(dt)
-
-    def __call__(self) -> float:
-        self.t += self.dt
-        return self.t
-
-    def advance(self, seconds: float) -> None:
-        self.t += float(seconds)
+# The virtual clock moved to repro.observe.clock when the observe layer
+# unified the engine's deadline clock and the span recorder's timestamps
+# behind one Clock protocol; re-exported here so existing fault-injection
+# imports keep working.
+from repro.observe.clock import TickingClock  # noqa: E402,F401
 
 
 def corrupt_engine_block(engine, operator: str,

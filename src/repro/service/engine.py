@@ -56,6 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import SolveStatus
+from repro.observe import metrics as _metrics
+from repro.observe.spans import span as _span
+from repro.observe.trace import ConvergenceTrace
 
 from .registry import OperatorRegistry, RegisteredOperator
 from .types import (RequestResult, RequestTelemetry, ServiceConfig,
@@ -125,6 +128,8 @@ class SolveEngine:
                            rid=self._next_rid, t_submit=self._clock())
         self._next_rid += 1
         self._queues[entry.name].append(req)
+        _metrics.ENGINE_QUEUE_DEPTH.set(len(self._queues[entry.name]),
+                                        operator=entry.name)
         return req.rid
 
     # -- serving ---------------------------------------------------------
@@ -184,6 +189,7 @@ class SolveEngine:
                         wall_s=now - req.t_submit, chunks_resident=0,
                         deadline_exceeded=True),
                     status=SolveStatus.DEADLINE, retries=req.retries))
+                self._observe_result(self._expired[-1])
                 continue
             if req.not_before and self._clock() < req.not_before:
                 q.append(req)            # backing off: not eligible yet
@@ -221,8 +227,35 @@ class SolveEngine:
                 B[:, j] = 1.0            # initial fill: inert pad column
                 mitv[j] = 0
 
+    @staticmethod
+    def _observe_result(res: RequestResult) -> None:
+        """One retirement into the metrics registry — the single source
+        of truth ``bench_service`` and external scrapes read; every
+        value here is host-known (the engine already pulled the flags),
+        so recording adds no device read."""
+        _metrics.ENGINE_REQUESTS.inc(status=res.status.name)
+        t = res.telemetry
+        _metrics.REQUEST_QUEUE_WAIT.observe(t.queue_wait_s)
+        _metrics.REQUEST_WALL.observe(t.wall_s)
+        _metrics.REQUEST_CHUNKS.observe(t.chunks_resident)
+        _metrics.SOLVE_ITERATIONS.observe(res.iterations)
+
     def _service_chunk(self, entry: RegisteredOperator
                        ) -> List[RequestResult]:
+        with _span("engine.chunk", operator=entry.name):
+            t0 = self._clock()
+            out = self._service_chunk_inner(entry)
+            _metrics.ENGINE_CHUNK_SECONDS.observe(self._clock() - t0)
+        blk = self._blocks[entry.name]
+        _metrics.ENGINE_QUEUE_DEPTH.set(
+            len(self._queues[entry.name]), operator=entry.name)
+        _metrics.ENGINE_SLOT_OCCUPANCY.set(
+            0 if blk is None else sum(s is not None for s in blk.slots),
+            operator=entry.name)
+        return out
+
+    def _service_chunk_inner(self, entry: RegisteredOperator
+                             ) -> List[RequestResult]:
         name = entry.name
         q = self._queues[name]
         blk = self._blocks[name]
@@ -242,9 +275,10 @@ class SolveEngine:
             blk = _Block(state=None, slots=[None] * m)
             self._blocks[name] = blk
             self._fill_vectors(entry, range(m), B, tolv, mitv)
-            blk.state = entry.step_fn(
-                entry.init_fn(jnp.asarray(B), jnp.asarray(tolv),
-                              jnp.asarray(mitv)))
+            with _span("engine.init_fill", operator=name):
+                blk.state = entry.step_fn(
+                    entry.init_fn(jnp.asarray(B), jnp.asarray(tolv),
+                                  jnp.asarray(mitv)))
         else:
             free = [j for j in range(m) if blk.slots[j] is None]
             mask = np.zeros((m,), bool)
@@ -254,27 +288,42 @@ class SolveEngine:
                 mitv = np.zeros((m,), np.int32)
                 self._fill_vectors(entry, free, B, tolv, mitv, mask=mask)
             if mask.any():
-                blk.state = entry.splice_step_fn(
-                    blk.state, jnp.asarray(mask), jnp.asarray(B),
-                    jnp.asarray(tolv), jnp.asarray(mitv))
+                with _span("engine.splice_step", operator=name,
+                           refills=int(mask.sum())):
+                    blk.state = entry.splice_step_fn(
+                        blk.state, jnp.asarray(mask), jnp.asarray(B),
+                        jnp.asarray(tolv), jnp.asarray(mitv))
             else:
-                blk.state = entry.step_fn(blk.state)
+                with _span("engine.step", operator=name):
+                    blk.state = entry.step_fn(blk.state)
         for req in blk.slots:
             if req is not None:
                 req.chunks_resident += 1
 
         # 3) retire finished / deadline-blown columns (ONE host transfer
         # for the (m,) flag vectors — plus the typed status vector when
-        # the block is guarded)
+        # the block is guarded and the trace ring when tracing is on:
+        # the harvest rides the host read the engine already does)
         st = blk.state
         guarded = "status" in st
+        traced = "trace" in st
         flags = [st["converged"], st["breakdown"], st["iterations"],
                  st["relres"], st["col_maxiter"]]
         if guarded:
             flags.append(st["status"])
-        got = jax.device_get(tuple(flags))
+        if traced:
+            flags += [st["trace"], st["i"]]
+        with _span("engine.retire", operator=name):
+            got = jax.device_get(tuple(flags))
         conv, brk, iters, relres, budget = got[:5]
-        status_arr = got[5] if guarded else None
+        k = 5
+        status_arr = None
+        if guarded:
+            status_arr = got[k]
+            k += 1
+        trace_buf, trace_steps = None, 0
+        if traced:
+            trace_buf, trace_steps = got[k], int(got[k + 1])
         recovery = self.scfg.recovery
         results: List[RequestResult] = []
         x_host = None
@@ -321,6 +370,7 @@ class SolveEngine:
                         recovery.retry_backoff_cap_s)
                 req.not_before = now + back
                 q.append(req)
+                _metrics.ENGINE_RETRIES.inc()
                 continue
             if x_host is None:
                 x_host = np.asarray(st["x"])
@@ -330,7 +380,14 @@ class SolveEngine:
                 # NaN back to the caller (the typed status says why)
                 xj = np.where(np.isfinite(xj), xj, 0.0)
             rr_j = float(relres[j])
-            results.append(RequestResult(
+            trace = None
+            if traced:
+                # per-column slice of the block's shared ring; spliced
+                # columns had their pre-admission rows NaN'd, which
+                # ConvergenceTrace.per_iteration() drops
+                trace = ConvergenceTrace(
+                    np.ascontiguousarray(trace_buf[:, :, j]), trace_steps)
+            res = RequestResult(
                 rid=req.rid, operator=name, x=xj,
                 iterations=int(iters[j]),
                 relres=rr_j if np.isfinite(rr_j) else float("inf"),
@@ -341,7 +398,9 @@ class SolveEngine:
                     wall_s=now - req.t_submit,
                     chunks_resident=req.chunks_resident,
                     deadline_exceeded=bool(late and not finished)),
-                status=sts, retries=req.retries))
+                status=sts, retries=req.retries, trace=trace)
+            self._observe_result(res)
+            results.append(res)
 
         # 4) drop a drained block (frozen orphans die with it)
         if not blk.live() and not q:

@@ -48,6 +48,13 @@ class ServiceConfig:
         scrubbed before their slot is reused, and failed requests are
         re-enqueued up to ``recovery.max_retries`` times with capped
         exponential backoff.
+      trace_cap: per-column iteration-trace ring capacity
+        (``SolverConfig.trace_cap``) for the resident blocks.  0 (the
+        default) serves untraced; when set, every retirement carries a
+        :class:`repro.observe.ConvergenceTrace` on
+        ``RequestResult.trace``, harvested at chunk boundaries with the
+        ONE host read the engine already does — zero extra
+        synchronizations on the device path.
     """
 
     max_batch: int = 8
@@ -56,6 +63,7 @@ class ServiceConfig:
     tol: float = 1e-8
     maxiter: int = 10_000
     recovery: Optional[RecoveryPolicy] = None
+    trace_cap: int = 0
 
 
 @dataclasses.dataclass
@@ -112,7 +120,9 @@ class RequestResult:
     unguarded serving the coarse classification; deadline expiry is
     ``DEADLINE`` either way).  ``retries`` counts how many times the
     engine re-ran the request before this outcome (0 without a recovery
-    policy).
+    policy).  ``trace`` is the request's per-iteration
+    :class:`repro.observe.ConvergenceTrace` when the engine serves with
+    ``ServiceConfig.trace_cap`` set (``None`` otherwise).
     """
 
     rid: int
@@ -125,3 +135,4 @@ class RequestResult:
     telemetry: RequestTelemetry
     status: SolveStatus = SolveStatus.CONVERGED
     retries: int = 0
+    trace: Optional[Any] = None

@@ -30,8 +30,19 @@ from repro.core.types import identity_reduce
 
 
 def _fields_equal(a, b):
-    return all(np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
-               for x, y in zip(a, b))
+    for x, y in zip(a, b):
+        if x is None or y is None:       # optional fields (status, trace)
+            if x is not y:
+                return False
+        elif isinstance(x, dict) or isinstance(y, dict):
+            if not (isinstance(x, dict) and isinstance(y, dict)
+                    and x.keys() == y.keys()
+                    and _fields_equal([x[k] for k in x], [y[k] for k in x])):
+                return False
+        elif not np.array_equal(np.asarray(x), np.asarray(y),
+                                equal_nan=True):
+            return False
+    return True
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,7 @@ import repro
 # the intended public surface of `import repro` — keep sorted
 PUBLIC_API = [
     "CSROperator",
+    "ConvergenceTrace",
     "DenseOperator",
     "DistributedSolver",
     "ELLOperator",
@@ -31,7 +32,8 @@ PUBLIC_API = [
 
 # submodules that legitimately appear as attributes after import
 # (importing repro.api pulls these in); NOT part of the call surface
-_SUBMODULES = {"api", "core", "precond", "kernels", "resilience"}
+_SUBMODULES = {"api", "core", "precond", "kernels", "resilience",
+               "observe"}
 
 
 def test_all_matches_snapshot():

@@ -13,8 +13,15 @@ touch only the host side.  This bench pins the price of that contract:
 * engine — a saturated engine burst with ``ServiceConfig.trace_cap``
   set (per-request trace harvest riding the retirement read, spans +
   metrics live) vs. the identical burst untraced.
+* profile — one ``solve(b, profile=...)`` device-timeline capture
+  (:mod:`repro.observe.profile`): records the capture's wall cost next
+  to a bare solve and the parsed report's headline fields.  Captures
+  are diagnostic (they hold the whole timeline), so this leg has no
+  budget — the artifact pins that the capture path stays functional
+  and what it costs.
 
-Asserted: both ratios <= 1.05 (the 5% budget the issue sets).
+Asserted: the session/engine ratios <= 1.05 (the 5% budget the issue
+sets).
 
 Artifact: experiments/bench_observe.json.
 
@@ -107,10 +114,39 @@ def _engine_overhead(quick: bool):
                 overhead_ratio=ratio, overhead_pct=100.0 * (ratio - 1.0))
 
 
+def _profile_capture(quick: bool):
+    import repro
+    from .common import runtime_dir
+    from repro.core import SolverConfig
+    from repro.core import matrices as M
+
+    nx = 6 if quick else 8
+    op, b, _ = M.poisson3d(nx)
+    solver = repro.make_solver(
+        "p-bicgsafe", op, config=SolverConfig(tol=1e-8, maxiter=800))
+    jax.block_until_ready(solver.solve(b).x)              # warm
+    t_bare = _best(lambda: solver.solve(b).x, 2)
+    out = runtime_dir("profile", "bench_observe")
+    t0 = time.perf_counter()
+    solver.solve(b, profile=str(out))
+    t_cap = time.perf_counter() - t0
+    rep = solver.last_profile
+    return dict(n=op.shape[0], t_bare_s=t_bare, t_captured_s=t_cap,
+                capture_cost_ratio=t_cap / t_bare,
+                device_wall_us=rep.device_wall_us,
+                n_device_events=rep.n_device_events,
+                overlap_efficiency=rep.overlap_efficiency)
+
+
 def run(quick: bool = False):
     print("\n== bench_observe (tracing + metrics overhead budget) ==")
     sess = _session_overhead(quick)
     eng = _engine_overhead(quick)
+    prof = _profile_capture(quick)
+    print(f"profile capture: bare {prof['t_bare_s'] * 1e3:.1f} ms vs "
+          f"captured+parsed {prof['t_captured_s'] * 1e3:.1f} ms "
+          f"({prof['n_device_events']} device events, "
+          f"device wall {prof['device_wall_us'] / 1e3:.2f} ms)")
     rows = [
         ["session solve", sess["n"], f"{sess['t_bare_s'] * 1e3:.1f}",
          f"{sess['t_traced_s'] * 1e3:.1f}",
@@ -125,7 +161,7 @@ def run(quick: bool = False):
     # still leave the measurements on disk for CI to upload
     path = write_json("bench_observe.json",
                       dict(budget_ratio=BUDGET, session=sess, engine=eng,
-                           quick=quick))
+                           profile=prof, quick=quick))
     print(f"\nwrote {path}")
     for name, r in (("session", sess), ("engine", eng)):
         assert r["overhead_ratio"] <= BUDGET, (

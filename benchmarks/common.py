@@ -8,6 +8,20 @@ from pathlib import Path
 
 OUT = Path("experiments")
 
+#: un-committed runtime output (profiler captures, quick dry-runs,
+#: trajectory reports) — ``.gitignore``'s ``experiments/*`` rule keeps
+#: everything under here out of the repo; only the schema-stamped
+#: ``experiments/*.json`` artifacts are tracked
+RUNTIME_OUT = OUT / "runtime"
+
+
+def runtime_dir(*parts: str) -> Path:
+    """Create (if needed) and return a directory under the ignored
+    ``experiments/runtime/`` tree for a bench's scratch output."""
+    p = RUNTIME_OUT.joinpath(*parts)
+    p.mkdir(parents=True, exist_ok=True)
+    return p
+
 
 def write_json(name: str, obj):
     """Write one benchmark artifact under experiments/.

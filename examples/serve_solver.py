@@ -39,7 +39,7 @@ from repro.core import matrices as M          # noqa: E402
 from repro.observe import RECORDER, prometheus  # noqa: E402
 from repro.service import ServiceConfig, SolveEngine  # noqa: E402
 
-OUT = "experiments/observe"
+OUT = "experiments/runtime/observe"
 
 
 def main():

@@ -66,6 +66,7 @@ from repro.core.substrate import SUBSTRATES, SubstrateLike, get_substrate
 from repro.core.types import (DotReduce, SolveResult, SolverConfig,
                               identity_reduce, per_column)
 from repro.observe import metrics as _metrics
+from repro.observe import profile as _profile
 from repro.observe.spans import span as _span
 from repro.observe.trace import wrap_trace
 from repro.precond.base import (PrecondLike, Preconditioner, resolve_precond,
@@ -238,6 +239,8 @@ class LinearSolver:
         self.stats: Dict[str, int] = {"traces": 0, "programs": 0, "solves": 0}
         self._programs: Dict[Any, Callable] = {}
         self._mesh_bindings: Dict[Any, "DistributedSolver"] = {}
+        #: ProfileReport of the most recent ``solve(..., profile=dir)``
+        self.last_profile = None
 
         # spec validated EAGERLY (bad binds fail at make_solver time) but
         # built LAZILY on first local-solve use: a session only ever used
@@ -377,6 +380,40 @@ class LinearSolver:
             self.stats["programs"] += 1
         return fn
 
+    def _run_program(self, key, build, *args, **kwargs):
+        """Invoke a memoized program; when a profiling capture is open
+        (``repro.observe.profile``), note the program + abstract arg
+        shapes so the capture can extract its HLO phase map afterwards.
+        The None check is the only overhead on the hot path."""
+        fn = self._program(key, build)
+        cap = _profile.active_capture()
+        if cap is not None:
+            cap.note_program(fn, args, kwargs)
+        return fn(*args, **kwargs)
+
+    def _profiled_run(self, key, build, args, profile_dir: str,
+                      entry: str) -> SolveResult:
+        """Warm the program, re-run it inside a profiler capture window,
+        and attach the analyzed :class:`~repro.observe.profile
+        .ProfileReport` as ``self.last_profile`` (also written to
+        ``profile_dir/profile.json`` next to the raw timeline)."""
+        import os
+
+        fn = self._program(key, build)
+        jax.block_until_ready(fn(*args))        # warm: keep compilation
+        with _profile.capture(profile_dir) as cap:  # out of the window
+            res = fn(*args)
+            jax.block_until_ready(res)
+            cap.note_program(fn, args)
+        iters = int(np.max(np.asarray(res.iterations)))
+        rep = cap.analyze(
+            iterations=iters or None,
+            label=f"{self.method}/{self.sub.name}/{entry}")
+        rep.save(os.path.join(profile_dir, "profile.json"))
+        cap.save_hlo_map()
+        self.last_profile = rep
+        return res
+
     def _mark_trace(self) -> None:
         """Called from inside each program closure: runs once per actual
         jit (re)trace — the amortization metric."""
@@ -436,7 +473,7 @@ class LinearSolver:
     # -- single-RHS -------------------------------------------------------
 
     def solve(self, b, x0=None, *, tol=None, maxiter=None,
-              r0_star=None, trace=None) -> SolveResult:
+              r0_star=None, trace=None, profile=None) -> SolveResult:
         """Solve A x = b; the compiled program is cached on the session.
 
         ``tol``/``maxiter`` override the bound config (each distinct
@@ -448,6 +485,10 @@ class LinearSolver:
         iterations; the solution is bitwise identical either way (the
         ring buffer is a write-only consumer of values the fused
         reduction already computes — see :mod:`repro.observe`).
+        ``profile=dir`` warms the program, re-runs the solve inside a
+        :func:`jax.profiler.trace` window, and attaches the analyzed
+        per-phase/overlap :class:`~repro.observe.profile.ProfileReport`
+        as ``self.last_profile`` (artifacts land under ``dir``).
         """
         if self.blocked:
             raise ValueError(
@@ -459,22 +500,25 @@ class LinearSolver:
         def build():
             solver = SOLVERS[self.method]
 
-            def run(b, x0, r0s):
+            def solve_program(b, x0, r0s):
                 self._mark_trace()
                 with internal_use():
                     return solver(self.operator, b, x0, config=cfg,
                                   r0_star=r0s, dot_reduce=self._dot_reduce,
                                   substrate=self.sub, precond=self.precond)
-            return jax.jit(run)
+            return jax.jit(solve_program)
 
         self._count_solve("solve")
-        return self._wrap_trace(
-            self._program(key, build)(jnp.asarray(b), x0, r0_star))
+        args = (jnp.asarray(b), x0, r0_star)
+        if profile is not None:
+            return self._wrap_trace(
+                self._profiled_run(key, build, args, profile, "solve"))
+        return self._wrap_trace(self._run_program(key, build, *args))
 
     # -- multi-RHS --------------------------------------------------------
 
     def solve_many(self, B, X0=None, *, tol=None, maxiter=None,
-                   r0_star=None, trace=None) -> SolveResult:
+                   r0_star=None, trace=None, profile=None) -> SolveResult:
         """Solve A X = B for all columns at once (ONE (9, m) reduction
         per iteration).
 
@@ -487,7 +531,9 @@ class LinearSolver:
         ``config.maxiter`` — the loop bound — the same way the
         service's resident blocks are.  ``trace`` as in :meth:`solve`;
         the returned :class:`~repro.observe.ConvergenceTrace` is
-        batched (``.column(j)`` for per-column views).
+        batched (``.column(j)`` for per-column views).  ``profile`` as
+        in :meth:`solve` (the report's per-iteration numbers use the
+        worst column's iteration count).
         """
         self._require_pbicgsafe("solve_many")
         B = self._as_block(B)
@@ -503,7 +549,7 @@ class LinearSolver:
         key = ("solve_many", cfg, X0 is None, r0_star is None)
 
         def build():
-            def run(B, X0, tolv, mitv, r0s):
+            def solve_many_program(B, X0, tolv, mitv, r0s):
                 self._mark_trace()
                 with internal_use():
                     st = init_state(self.block_matvec, self._prep(B), X0,
@@ -515,11 +561,14 @@ class LinearSolver:
                                     config=cfg, dot_reduce=self._dot_reduce,
                                     substrate=self.sub)
                 return result_from_state(st)
-            return jax.jit(run)
+            return jax.jit(solve_many_program)
 
         self._count_solve("solve_many")
-        return self._wrap_trace(
-            self._program(key, build)(B, X0, tol_col, mit_col, r0_star))
+        args = (B, X0, tol_col, mit_col, r0_star)
+        if profile is not None:
+            return self._wrap_trace(self._profiled_run(
+                key, build, args, profile, "solve_many"))
+        return self._wrap_trace(self._run_program(key, build, *args))
 
     # -- open-loop handles (what repro.service drives) --------------------
 
@@ -536,7 +585,7 @@ class LinearSolver:
         key = ("init", X0 is None, r0_star is None)
 
         def build():
-            def run(B, X0, tolv, mitv, r0s):
+            def init_program(B, X0, tolv, mitv, r0s):
                 self._mark_trace()
                 with internal_use():
                     return init_state(self.block_matvec, self._prep(B), X0,
@@ -544,9 +593,10 @@ class LinearSolver:
                                       dot_reduce=self._dot_reduce,
                                       substrate=self.sub, tol=tolv,
                                       maxiter=mitv)
-            return jax.jit(run)
+            return jax.jit(init_program)
 
-        return self._program(key, build)(B, X0, tol_col, mit_col, r0_star)
+        return self._run_program(key, build, B, X0, tol_col, mit_col,
+                                 r0_star)
 
     def step_chunk(self, state: dict, k: int) -> dict:
         """Advance every live column by up to ``k`` iterations — ONE
@@ -554,16 +604,16 @@ class LinearSolver:
         self._require_pbicgsafe("step_chunk")
 
         def build():
-            def run(state, k):
+            def step_chunk_program(state, k):
                 self._mark_trace()
                 with internal_use():
                     return step_chunk(self.block_matvec, state, k,
                                       config=self.config,
                                       dot_reduce=self._dot_reduce,
                                       substrate=self.sub)
-            return jax.jit(run, static_argnames=("k",))
+            return jax.jit(step_chunk_program, static_argnames=("k",))
 
-        return self._program(("step_chunk",), build)(state, k=int(k))
+        return self._run_program(("step_chunk",), build, state, k=int(k))
 
     def splice(self, state: dict, refill, B_new, *, tol=None,
                maxiter=None, r0_star=None) -> dict:
@@ -578,7 +628,7 @@ class LinearSolver:
         key = ("splice", r0_star is None)
 
         def build():
-            def run(state, refill, Bn, tolv, mitv, r0s):
+            def splice_program(state, refill, Bn, tolv, mitv, r0s):
                 self._mark_trace()
                 with internal_use():
                     return splice_columns(self.block_matvec, state, refill,
@@ -586,10 +636,11 @@ class LinearSolver:
                                           dot_reduce=self._dot_reduce,
                                           substrate=self.sub, tol=tolv,
                                           maxiter=mitv)
-            return jax.jit(run)
+            return jax.jit(splice_program)
 
-        return self._program(key, build)(
-            state, jnp.asarray(refill), B_new, tol_col, mit_col, r0_star)
+        return self._run_program(
+            key, build, state, jnp.asarray(refill), B_new, tol_col,
+            mit_col, r0_star)
 
     def splice_step(self, state: dict, refill, B_new, tol, maxiter,
                     k: int) -> dict:
@@ -604,7 +655,7 @@ class LinearSolver:
                             jnp.int32, name="maxiter")
 
         def build():
-            def run(state, refill, Bn, tolv, mitv, k):
+            def splice_step_program(state, refill, Bn, tolv, mitv, k):
                 self._mark_trace()
                 with internal_use():
                     st = splice_columns(self.block_matvec, state, refill,
@@ -616,10 +667,11 @@ class LinearSolver:
                                       config=self.config,
                                       dot_reduce=self._dot_reduce,
                                       substrate=self.sub)
-            return jax.jit(run, static_argnames=("k",))
+            return jax.jit(splice_step_program, static_argnames=("k",))
 
-        return self._program(("splice_step",), build)(
-            state, jnp.asarray(refill), B_new, tol_col, mit_col, k=int(k))
+        return self._run_program(
+            ("splice_step",), build, state, jnp.asarray(refill), B_new,
+            tol_col, mit_col, k=int(k))
 
     def result(self, state: dict) -> SolveResult:
         """Package an open-loop state pytree as a :class:`SolveResult`.
@@ -698,13 +750,24 @@ class DistributedSolver:
             self.session.stats["programs"] += 1
         return fn
 
+    def _run_program(self, key, build, *args):
+        fn = self._program(key, build)
+        cap = _profile.active_capture()
+        if cap is not None:
+            cap.note_program(fn, args)
+        return fn(*args)
+
     def solve(self, b_grid, *, tol=None, maxiter=None,
-              trace=None) -> SolveResult:
+              trace=None, profile=None) -> SolveResult:
         """Sharded single-RHS solve of the bound method on the mesh.
 
         ``trace`` as in :meth:`LinearSolver.solve` — the ring buffer is
         built from psum-replicated scalars, so tracing adds no
         collective (still ONE psum per iteration, contract-verified).
+        ``profile=dir`` as in :meth:`LinearSolver.solve`: the captured
+        timeline covers every participating device, so here the overlap
+        efficiency reads the psum/all-reduce time actually hidden under
+        the halo-exchange matvec (report on ``session.last_profile``).
         """
         s = self.session
         cfg = s._derive(tol, maxiter, trace)
@@ -717,7 +780,24 @@ class DistributedSolver:
                 precond=s.precond_spec)
 
         s._count_solve("mesh_solve")
-        return s._wrap_trace(self._program(("dsolve", cfg), build)(b_grid))
+        key = ("dsolve", cfg)
+        if profile is not None:
+            import os
+
+            fn = self._program(key, build)
+            jax.block_until_ready(fn(b_grid))   # warm outside the window
+            with _profile.capture(profile) as cap:
+                res = fn(b_grid)
+                jax.block_until_ready(res)
+                cap.note_program(fn, (b_grid,))
+            rep = cap.analyze(
+                iterations=int(np.max(np.asarray(res.iterations))) or None,
+                label=f"{s.method}/{s.sub.name}/mesh_solve")
+            rep.save(os.path.join(profile, "profile.json"))
+            cap.save_hlo_map()
+            s.last_profile = rep
+            return s._wrap_trace(res)
+        return s._wrap_trace(self._run_program(key, build, b_grid))
 
     def solve_many(self, B_grid, *, tol=None, maxiter=None,
                    trace=None) -> SolveResult:
@@ -735,7 +815,7 @@ class DistributedSolver:
 
         s._count_solve("mesh_solve_many")
         return s._wrap_trace(
-            self._program(("dsolve_many", cfg), build)(B_grid))
+            self._run_program(("dsolve_many", cfg), build, B_grid))
 
 
 # ---------------------------------------------------------------------------

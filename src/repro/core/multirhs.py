@@ -330,12 +330,16 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
         # independent, exactly as in the m=1 pipelined iteration.  The
         # guarded (11, m) phase additionally reads the PREVIOUS iterate
         # x (a loop-carried value, no edge to As) for its health rows.
-        As = bmv(s)
-        if guard:
-            dots = dot_reduce(
-                sub.bicgsafe_dots_health(s, y, r, t_prev, RS, st["x"]))
-        else:
-            dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, RS))
+        # (named scopes land in HLO op metadata so the runtime profiler
+        # can attribute device time to phases; no ops, bitwise-unchanged.)
+        with jax.named_scope("repro.matvec"):
+            As = bmv(s)
+        with jax.named_scope("repro.reduce"):
+            if guard:
+                dots = dot_reduce(
+                    sub.bicgsafe_dots_health(s, y, r, t_prev, RS, st["x"]))
+            else:
+                dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, RS))
 
         # Each column's i=0 branch keys off its OWN iteration count, so a
         # freshly spliced column in a long-running block initializes its
@@ -370,17 +374,21 @@ def _make_body(sub, bmv: Callable, config: SolverConfig,
         # convergence mask rides into the phase — on the pallas substrate
         # frozen columns write their input tiles back inside the kernel,
         # so no second (n, m) masking pass is needed for these outputs.
-        upd = sub.axpy_phase(
-            dict(r=r, p=st["p"], u=st["u"], t=t_prev, y=y, z=st["z"],
-                 s=s, l=st["l"], g=st["g"], w=st["w"], x=st["x"], As=As),
-            (alpha, beta, zeta, eta), mask=advance)
+        with jax.named_scope("repro.axpy"):
+            upd = sub.axpy_phase(
+                dict(r=r, p=st["p"], u=st["u"], t=t_prev, y=y, z=st["z"],
+                     s=s, l=st["l"], g=st["g"], w=st["w"], x=st["x"],
+                     As=As),
+                (alpha, beta, zeta, eta), mask=advance)
         p, u, q, w, t = (upd[k] for k in ("p", "u", "q", "w", "t"))
         z, y_next, x_next, r_next = (
             upd[k] for k in ("z", "y", "x", "r"))
 
-        Aw = bmv(w)                                   # block MV #2
-        l, g_next, s_next = pipelined_recurrence_tail(
-            q, s, As, st["g"], Aw, alpha, zeta, eta)
+        with jax.named_scope("repro.matvec"):
+            Aw = bmv(w)                               # block MV #2
+        with jax.named_scope("repro.axpy"):
+            l, g_next, s_next = pipelined_recurrence_tail(
+                q, s, As, st["g"], Aw, alpha, zeta, eta)
 
         # The recurrence tail (l, g, s) and the scalar carries have no
         # in-kernel mask — freeze them here.

@@ -84,9 +84,13 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
         # MV #1 (A s_i) and the fused reduction are mutually independent:
         # the dots read only {s, y, r, t_prev, rs}.  This is the paper's
         # communication hiding — in the lowered HLO there is no path from
-        # the all-reduce to the matvec.
-        As = matvec(s)
-        dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, rs))
+        # the all-reduce to the matvec.  The named scopes land in HLO op
+        # metadata so repro.observe.profile can attribute device time to
+        # phases; they emit no ops and leave the math bitwise-unchanged.
+        with jax.named_scope("repro.matvec"):
+            As = matvec(s)
+        with jax.named_scope("repro.reduce"):
+            dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, rs))
 
         beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
             dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)
@@ -96,19 +100,22 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
         # --- blocked vector-update phase (Alg. 3.1 lines 23-32): one
         # substrate call covers all 10 recurrence updates (one fused HBM
         # pass on the pallas substrate).
-        upd = sub.axpy_phase(
-            dict(r=r, p=st["p"], u=st["u"], t=t_prev, y=y, z=st["z"],
-                 s=s, l=st["l"], g=st["g"], w=st["w"], x=st["x"], As=As),
-            (alpha, beta, zeta, eta))
+        with jax.named_scope("repro.axpy"):
+            upd = sub.axpy_phase(
+                dict(r=r, p=st["p"], u=st["u"], t=t_prev, y=y, z=st["z"],
+                     s=s, l=st["l"], g=st["g"], w=st["w"], x=st["x"], As=As),
+                (alpha, beta, zeta, eta))
         p, o, u, q, w = (upd[k] for k in ("p", "o", "u", "q", "w"))
         t, z, y_next, x_next, r_next = (
             upd[k] for k in ("t", "z", "y", "x", "r"))
 
         def pipe_tail():
             """Recurrence closure: MV #2 and the three recurred A-images."""
-            Aw = matvec(w)                            # MV #2 (A w_i)
-            l_n, g_n, s_n = pipelined_recurrence_tail(
-                q, s, As, st["g"], Aw, alpha, zeta, eta)
+            with jax.named_scope("repro.matvec"):
+                Aw = matvec(w)                        # MV #2 (A w_i)
+            with jax.named_scope("repro.axpy"):
+                l_n, g_n, s_n = pipelined_recurrence_tail(
+                    q, s, As, st["g"], Aw, alpha, zeta, eta)
             return w, t, y_next, x_next, r_next, l_n, g_n, s_n
 
         if not residual_replacement:
@@ -123,14 +130,16 @@ def _pipelined_solve(matvec, b, x0, config, r0_star, dot_reduce,
             def rr_branch():
                 # Alg. 4.1 lines 26-33 + 38-45: w from a true matvec, then
                 # reset r, l, g, s to their true values.
-                w_t = matvec(u)                       # true A u_i
+                with jax.named_scope("repro.matvec"):
+                    w_t = matvec(u)                   # true A u_i
                 t_t = o - w_t
                 y_t = zeta * s + eta * y - alpha * w_t
                 x_t = st["x"] + alpha * p + z
-                r_t = b - matvec(x_t)
-                l_t = matvec(t_t)
-                g_t = matvec(y_t)
-                s_t = matvec(r_t)
+                with jax.named_scope("repro.matvec"):
+                    r_t = b - matvec(x_t)
+                    l_t = matvec(t_t)
+                    g_t = matvec(y_t)
+                    s_t = matvec(r_t)
                 return w_t, t_t, y_t, x_t, r_t, l_t, g_t, s_t
 
             w, t, y_next, x_next, r_next, l, g_next, s_next = jax.lax.cond(

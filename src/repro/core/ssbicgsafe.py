@@ -65,24 +65,31 @@ def ssbicgsafe2_solve(matvec: Callable,
 
     def body(st):
         r, y, t_prev = st["r"], st["y"], st["t"]
-        s = matvec(r)                                   # MV #1: s_i = A r_i
+        # named scopes tag the HLO op metadata for the runtime profiler
+        # (repro.observe.profile); no ops are emitted, math is unchanged.
+        with jax.named_scope("repro.matvec"):
+            s = matvec(r)                               # MV #1: s_i = A r_i
         # --- single fused reduction phase (depends on s -> no overlap) ---
-        dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, rs))
+        with jax.named_scope("repro.reduce"):
+            dots = dot_reduce(sub.bicgsafe_dots(s, y, r, t_prev, rs))
         beta, alpha, zeta, eta, f, rr, bad = bicgsafe_coefficients(
             dots, st["i"], st["alpha"], st["zeta"], st["f"], eps)
         relres = jnp.sqrt(jnp.abs(rr)) / norm_r0
         done = relres <= config.tol
 
         # --- vector updates (paper lines 23-30) ---
-        p = r + beta * (st["p"] - st["u"])
-        o = s + beta * t_prev
-        u = zeta * o + eta * (y + beta * st["u"])
-        w = matvec(u)                                   # MV #2: w_i = A u_i
-        t = o - w
-        z = zeta * r + eta * st["z"] - alpha * u
-        y_next = zeta * s + eta * y - alpha * w
-        x_next = st["x"] + alpha * p + z
-        r_next = r - alpha * o - y_next
+        with jax.named_scope("repro.axpy"):
+            p = r + beta * (st["p"] - st["u"])
+            o = s + beta * t_prev
+            u = zeta * o + eta * (y + beta * st["u"])
+        with jax.named_scope("repro.matvec"):
+            w = matvec(u)                               # MV #2: w_i = A u_i
+        with jax.named_scope("repro.axpy"):
+            t = o - w
+            z = zeta * r + eta * st["z"] - alpha * u
+            y_next = zeta * s + eta * y - alpha * w
+            x_next = st["x"] + alpha * p + z
+            r_next = r - alpha * o - y_next
 
         hist_i = history_update(st["hist"], st["i"], relres, config)
         new = dict(

@@ -69,6 +69,8 @@ def run_cell(solver_name: str, multi_pod: bool, outdir: Path,
             "argument_size_in_bytes", "output_size_in_bytes",
             "temp_size_in_bytes", "peak_memory_in_bytes")}
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # jax >= 0.4.x returns [dict]
+            cost = cost[0] if cost else {}
         text = compiled.as_text()
         # the solver iteration loop is a while: per-iteration collectives
         # (reported per iteration, NOT trip-corrected: iteration count is
@@ -114,6 +116,11 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--fp32", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
+    # quick-mode knobs (bench_roofline --quick compiles a small grid)
+    ap.add_argument("--nx", type=int, default=2048)
+    ap.add_argument("--ny", type=int, default=1024)
+    ap.add_argument("--nz", type=int, default=1024)
+    ap.add_argument("--maxiter", type=int, default=500)
     args = ap.parse_args()
 
     solvers = list(SOLVERS) if args.all else [args.solver]
@@ -124,6 +131,8 @@ def main():
     for mp in meshes:
         for s in solvers:
             rec = run_cell(s, mp, Path(args.out), dtype=dtype,
+                           nx=args.nx, ny=args.ny, nz=args.nz,
+                           maxiter=args.maxiter,
                            force=args.force, tag=tag)
             n_err += rec.get("status") == "error"
     raise SystemExit(1 if n_err else 0)

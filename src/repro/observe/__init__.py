@@ -32,23 +32,45 @@ The legs:
   (:func:`snapshot`), wired into :mod:`repro.api`,
   :mod:`repro.service.engine` and the guarded solve path.
 
+Two measurement layers sit on top:
+
+* **Device profiles** (:mod:`repro.observe.profile`) — wrap a solve in
+  ``jax.profiler.trace``, align the captured device timeline with the
+  compiled HLO (the solver loops tag matvec / reduce / axpy via
+  ``jax.named_scope`` — metadata only, bitwise-identical math) and
+  compute the per-phase device-time breakdown, the **overlap
+  efficiency** (fraction of reduction time hidden under in-flight
+  matvec — the paper's claim, measured), and the exposed-communication
+  time per iteration.  Front doors: ``session.solve(..., profile=DIR)``,
+  ``ServiceConfig.profile_dir``, ``python -m repro.observe profile``.
+* **Perf trajectory** (:mod:`repro.observe.trajectory`) — consolidate
+  the schema-stamped ``experiments/*.json`` benchmark artifacts across
+  git history into a time-series and gate on the noise-tolerant
+  per-metric thresholds declared in ``benchmarks/run.py``;
+  ``python -m repro.observe trajectory`` is the CI gate.
+
 ``python -m repro.observe smoke`` writes a full artifact set
 (trace-event JSON, Prometheus text, metrics + convergence JSON) under
-``experiments/observe/``; ``python -m repro.observe report`` renders a
-solve/engine timeline and convergence summary from those artifacts.
+``experiments/runtime/observe/``; ``python -m repro.observe report``
+renders a solve/engine timeline, convergence summary, and any device
+profiles from those artifacts.
 """
 from __future__ import annotations
 
 from .clock import Clock, SYSTEM_CLOCK, TickingClock
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
                       prometheus, snapshot)
+from .profile import ProfileReport, analyze_timeline
 from .spans import RECORDER, Span, SpanRecorder, span
 from .trace import ConvergenceTrace, wrap_trace
+from .trajectory import BenchSpec, Metric, TrajectoryReport
 
 __all__ = [
     "Clock", "SYSTEM_CLOCK", "TickingClock",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
     "prometheus", "snapshot",
+    "ProfileReport", "analyze_timeline",
     "RECORDER", "Span", "SpanRecorder", "span",
     "ConvergenceTrace", "wrap_trace",
+    "BenchSpec", "Metric", "TrajectoryReport",
 ]

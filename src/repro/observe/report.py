@@ -1,16 +1,32 @@
-"""The ``python -m repro.observe`` CLI: smoke artifacts + ASCII report.
+"""The ``python -m repro.observe`` CLI: smoke artifacts + ASCII reports.
 
-Two subcommands:
+Subcommands (all artifact defaults live under the git-ignored
+``experiments/runtime/`` tree — committed ``experiments/*.json`` is
+reserved for schema-stamped benchmark results):
 
-* ``smoke [--out DIR] [--quick]`` — run one traced solve and one engine
+* ``smoke [--out DIR] [--full]`` — run one traced solve and one engine
   burst against small stencil problems and write the full artifact set
-  under ``DIR`` (default ``experiments/observe``): ``spans.trace.json``
-  (Chrome trace events — load it in Perfetto), ``metrics.prom``
-  (Prometheus text exposition), ``metrics.json`` (snapshot), and
-  ``convergence.json`` (the traced solve's ring buffer).  This is what
-  the CI observe-smoke job runs.
-* ``report [--dir DIR]`` — render those artifacts as a host span
-  timeline, a metrics digest, and a convergence summary, on stdout.
+  under ``DIR`` (default ``experiments/runtime/observe``):
+  ``spans.trace.json`` (Chrome trace events — load it in Perfetto),
+  ``metrics.prom`` (Prometheus text exposition), ``metrics.json``
+  (snapshot), and ``convergence.json`` (the traced solve's ring
+  buffer).  This is what the CI observe-smoke job runs.
+* ``profile [--out DIR] [--full]`` — capture *device* timelines
+  (:mod:`repro.observe.profile`): one session solve per substrate (jnp
+  + pallas-interpret) and one engine drain, each under its own
+  subdirectory of ``DIR`` (default ``experiments/runtime/profile``)
+  with the raw trace, the HLO phase map, and ``profile.json`` carrying
+  the per-phase breakdown + overlap efficiency.  The CI profile-smoke
+  job runs this.
+* ``report [--dir DIR]`` — render whatever artifacts live under
+  ``DIR``: host span timeline, metrics digest, convergence summary, and
+  any ``profile.json`` phase breakdowns (searched one level deep).
+* ``trajectory [--out DIR] [--no-gate]`` — consolidate the committed
+  ``experiments/*.json`` benchmark artifacts across git history into a
+  time-series + trend report and evaluate the per-metric regression
+  thresholds declared in ``benchmarks/run.py`` (see
+  :mod:`repro.observe.trajectory`).  Exits 1 on gated regressions
+  unless ``--no-gate``.
 
 Everything here is host-side plumbing over :mod:`repro.observe`'s
 recorders; the solves themselves go through the ordinary front door
@@ -111,6 +127,63 @@ def run_smoke(out_dir: str, quick: bool = True) -> Dict[str, str]:
 
 
 # ---------------------------------------------------------------------------
+# profile
+# ---------------------------------------------------------------------------
+
+def run_profile(out_dir: str, quick: bool = True) -> Dict[str, str]:
+    """Device-timeline captures: one session solve per substrate plus
+    one engine drain, each written under ``out_dir/<leg>/``.
+
+    Returns ``{leg name: profile.json path}``.
+    """
+    import numpy as np
+
+    from jax.experimental import enable_x64
+
+    import repro
+    from repro.core import SolverConfig
+    from repro.core import matrices as M
+    from repro.service import ServiceConfig, SolveEngine
+
+    os.makedirs(out_dir, exist_ok=True)
+    nx = 6 if quick else 10
+    n_req = 6 if quick else 24
+    out: Dict[str, str] = {}
+
+    with enable_x64(True):
+        op, b, _ = M.poisson3d(nx)
+        for sub in ("jnp", "pallas"):
+            leg = f"session_{sub}"
+            leg_dir = os.path.join(out_dir, leg)
+            solver = repro.make_solver(
+                "p-bicgsafe", op, substrate=sub,
+                config=SolverConfig(tol=1e-8, maxiter=800))
+            res = solver.solve(b, profile=leg_dir)
+            rep = solver.last_profile
+            print(f"\n== profile: {leg} (converged="
+                  f"{bool(res.converged)}) ==")
+            print(rep.render())
+            out[leg] = os.path.join(leg_dir, "profile.json")
+
+        eng_dir = os.path.join(out_dir, "engine")
+        eng = SolveEngine(ServiceConfig(max_batch=4, chunk=16, tol=1e-8,
+                                        maxiter=800,
+                                        profile_dir=eng_dir))
+        eng.register(op, name="poisson")
+        rng = np.random.default_rng(0)
+        for _ in range(n_req):
+            eng.submit("poisson", rng.standard_normal(op.shape[0]))
+        results = eng.run()
+        print(f"\n== profile: engine ({len(results)} requests, "
+              f"{sum(r.converged for r in results)} converged) ==")
+        print(eng.last_profile.render())
+        out["engine"] = os.path.join(eng_dir, "profile.json")
+
+    print(f"\nprofiles under {out_dir}/: " + ", ".join(sorted(out)))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # report
 # ---------------------------------------------------------------------------
 
@@ -207,6 +280,19 @@ def run_report(dir_: str) -> int:
             data = json.load(fh)
         print("\n== convergence ==")
         print("\n".join(_render_convergence(data)))
+    # device-profile breakdowns (dir itself + one level of leg subdirs)
+    from .profile import ProfileReport
+    candidates = [os.path.join(dir_, "profile.json")] + sorted(
+        os.path.join(dir_, d, "profile.json")
+        for d in (os.listdir(dir_) if os.path.isdir(dir_) else [])
+        if os.path.isdir(os.path.join(dir_, d)))
+    for p in candidates:
+        if not os.path.exists(p):
+            continue
+        found = True
+        rep = ProfileReport.load(p)
+        print(f"\n== device profile: {rep.label or p} ==")
+        print(rep.render())
     if not found:
         print(f"no observe artifacts under {dir_!r}; run "
               "`python -m repro.observe smoke` first")
@@ -227,15 +313,37 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_smoke = sub.add_parser(
         "smoke", help="run a traced quick solve + engine burst and write "
                       "the artifact set")
-    p_smoke.add_argument("--out", default="experiments/observe")
+    p_smoke.add_argument("--out", default="experiments/runtime/observe")
     p_smoke.add_argument("--full", action="store_true",
                          help="larger problem / more requests")
+    p_prof = sub.add_parser(
+        "profile", help="capture device timelines (session solve per "
+                        "substrate + engine drain) and compute the "
+                        "per-phase / overlap breakdown")
+    p_prof.add_argument("--out", default="experiments/runtime/profile")
+    p_prof.add_argument("--full", action="store_true",
+                        help="larger problem / more requests")
     p_report = sub.add_parser(
         "report", help="render the artifact set as timeline + metrics + "
-                       "convergence summary")
-    p_report.add_argument("--dir", default="experiments/observe")
+                       "convergence summary + device profiles")
+    p_report.add_argument("--dir", default="experiments/runtime/observe")
+    p_traj = sub.add_parser(
+        "trajectory", help="consolidate committed benchmark artifacts "
+                           "across git history and gate on the metric "
+                           "thresholds from benchmarks/run.py")
+    p_traj.add_argument("--out", default="experiments/runtime/trajectory")
+    p_traj.add_argument("--root", default=".")
+    p_traj.add_argument("--no-gate", action="store_true",
+                        help="report only; never exit nonzero")
     args = parser.parse_args(argv)
     if args.cmd == "smoke":
         run_smoke(args.out, quick=not args.full)
         return 0
+    if args.cmd == "profile":
+        run_profile(args.out, quick=not args.full)
+        return 0
+    if args.cmd == "trajectory":
+        from .trajectory import run_trajectory
+        return run_trajectory(args.out, root=args.root,
+                              gate=not args.no_gate)
     return run_report(args.dir)

@@ -1,0 +1,389 @@
+"""Perf-trajectory consolidation + regression gate over experiments/*.json.
+
+PR 8 made every benchmark artifact schema-stamped and committed so the
+performance trajectory would be diffable commit over commit; this module
+is the consumer.  It reads each registered artifact at every commit that
+touched it (``git log`` + ``git show`` — no checkout churn), appends the
+current working-tree values, and evaluates noise-tolerant per-metric
+regression thresholds that are declared NEXT TO the benchmark
+registration (``benchmarks/run.py::REGISTRY``) — the person adding a
+benchmark decides what "worse" means for it.
+
+Gating model:
+
+* every :class:`Metric` names a value inside the artifact by a
+  ``/``-separated path (list indices allowed), a direction, and a
+  relative tolerance;
+* the baseline is the **median of the last 5 historical points** —
+  robust to one noisy CI run poisoning the reference;
+* a *gated* metric whose current value is worse than baseline by more
+  than ``rel_tol`` fails the gate (exit 1); *watch* metrics
+  (``gate=False`` — wall-clock times, throughputs, anything
+  machine-sensitive) are reported but never fail;
+* booleans gate as 1.0/0.0 with ``rel_tol=0`` — a claim that flips to
+  False always trips.
+
+Everything that needs git is separated from the pure evaluation
+(:func:`evaluate_metric`, :func:`evaluate`) so the injected-regression
+tests run device- and git-free.  CLI:
+``python -m repro.observe trajectory [--gate]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+import subprocess
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+SCHEMA_TRAJECTORY = "repro.observe/trajectory/v1"
+
+#: historical points the baseline median reads (newest-first window)
+BASELINE_WINDOW = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One gated/watched value inside a benchmark artifact.
+
+    ``path`` walks the artifact JSON with ``/`` separators (numeric
+    segments index lists).  ``direction`` says which way is better.
+    ``rel_tol`` is the fraction of the baseline the current value may be
+    worse by before it counts as a regression (0 = any worsening trips —
+    use for exact counts and booleans).  ``gate=False`` records the
+    series and flags regressions in the report without ever failing the
+    gate — for wall-clock metrics that vary machine to machine.
+    """
+
+    path: str
+    direction: str = "higher"            # "higher" | "lower" is better
+    rel_tol: float = 0.1
+    gate: bool = True
+    note: str = ""
+
+    def __post_init__(self):
+        if self.direction not in ("higher", "lower"):
+            raise ValueError(f"direction must be 'higher' or 'lower', "
+                             f"got {self.direction!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """One benchmark registration: runner module, artifact, metrics."""
+
+    name: str
+    module: str                          # e.g. "benchmarks.bench_cost"
+    artifact: str                        # file name under experiments/
+    metrics: Tuple[Metric, ...] = ()
+
+
+def resolve_path(doc: Any, path: str) -> Optional[float]:
+    """Walk ``doc`` by a ``/``-separated path; returns the value as a
+    float (bools become 1.0/0.0), or None when absent/non-numeric."""
+    cur = doc
+    for seg in path.split("/"):
+        if isinstance(cur, dict):
+            if seg not in cur:
+                return None
+            cur = cur[seg]
+        elif isinstance(cur, list):
+            try:
+                cur = cur[int(seg)]
+            except (ValueError, IndexError):
+                return None
+        else:
+            return None
+    if isinstance(cur, bool):
+        return 1.0 if cur else 0.0
+    if isinstance(cur, (int, float)):
+        return float(cur)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# artifact history (git) + current run
+# ---------------------------------------------------------------------------
+
+def _git(args: Sequence[str], root: str) -> Optional[str]:
+    try:
+        out = subprocess.run(["git", "-C", root, *args],
+                             capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    return out.stdout if out.returncode == 0 else None
+
+
+def artifact_history(artifact: str, root: str = ".",
+                     limit: int = 50) -> List[Dict[str, Any]]:
+    """Every committed version of ``experiments/<artifact>``, oldest
+    first: ``[{commit, committed_unix, data}, ...]``.  Needs full git
+    history (CI: ``fetch-depth: 0``); returns [] outside a repo."""
+    rel = f"experiments/{artifact}"
+    log = _git(["log", f"--max-count={limit}", "--format=%H %ct",
+                "--", rel], root)
+    if not log:
+        return []
+    points = []
+    for line in reversed(log.strip().splitlines()):
+        sha, _, ct = line.partition(" ")
+        blob = _git(["show", f"{sha}:{rel}"], root)
+        if blob is None:
+            continue                     # commit deleted the artifact
+        try:
+            data = json.loads(blob)
+        except json.JSONDecodeError:
+            continue
+        points.append({"commit": sha, "committed_unix": int(ct or 0),
+                       "data": data})
+    return points
+
+
+def current_point(artifact: str, root: str = ".") -> Optional[Dict[str, Any]]:
+    path = os.path.join(root, "experiments", artifact)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as fh:
+            return {"commit": None, "data": json.load(fh)}
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# evaluation (pure — no git, no filesystem)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MetricVerdict:
+    bench: str
+    metric: Metric
+    series: List[Optional[float]]        # historical values, oldest first
+    current: Optional[float]
+    baseline: Optional[float]
+    status: str                          # ok|regression|watch-regression|
+    detail: str = ""                     # new|no-data
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "regression"
+
+
+def evaluate_metric(metric: Metric, history: Sequence[Optional[float]],
+                    current: Optional[float], bench: str = "") \
+        -> MetricVerdict:
+    """Verdict for one metric given its historical series + current
+    value.  The baseline is the median of the last
+    :data:`BASELINE_WINDOW` non-missing points."""
+    series = list(history)
+    known = [v for v in series if v is not None]
+    if current is None:
+        return MetricVerdict(bench, metric, series, None, None, "no-data",
+                             "metric absent from the current artifact")
+    if not known:
+        return MetricVerdict(bench, metric, series, current, None, "new",
+                             "no committed history yet")
+    baseline = statistics.median(known[-BASELINE_WINDOW:])
+    scale = max(abs(baseline), 1e-12)
+    delta = (current - baseline) / scale
+    worse = -delta if metric.direction == "higher" else delta
+    if worse > metric.rel_tol:
+        status = "regression" if metric.gate else "watch-regression"
+        detail = (f"{current:g} vs baseline {baseline:g} "
+                  f"({100 * worse:+.1f}% worse, tol "
+                  f"{100 * metric.rel_tol:.0f}%)")
+    else:
+        status, detail = "ok", f"{current:g} vs baseline {baseline:g}"
+    return MetricVerdict(bench, metric, series, current, baseline, status,
+                         detail)
+
+
+@dataclasses.dataclass
+class TrajectoryReport:
+    verdicts: List[MetricVerdict]
+    n_commits: Dict[str, int]            # bench -> history depth
+
+    @property
+    def regressions(self) -> List[MetricVerdict]:
+        return [v for v in self.verdicts if v.failed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+
+def evaluate(registry: Sequence[BenchSpec],
+             histories: Dict[str, List[Dict[str, Any]]],
+             currents: Dict[str, Optional[Dict[str, Any]]]) \
+        -> TrajectoryReport:
+    """Pure evaluation over pre-loaded artifact histories: ``histories``
+    and ``currents`` map bench name -> (points list / current point)."""
+    verdicts, depths = [], {}
+    for spec in registry:
+        points = histories.get(spec.name, [])
+        cur = currents.get(spec.name)
+        depths[spec.name] = len(points)
+        for metric in spec.metrics:
+            series = [resolve_path(p["data"], metric.path) for p in points]
+            current = resolve_path(cur["data"], metric.path) if cur else None
+            verdicts.append(
+                evaluate_metric(metric, series, current, bench=spec.name))
+    return TrajectoryReport(verdicts, depths)
+
+
+def evaluate_repo(registry: Sequence[BenchSpec], root: str = ".",
+                  limit: int = 50) -> TrajectoryReport:
+    """Load histories from git + working tree, then :func:`evaluate`."""
+    histories = {s.name: artifact_history(s.artifact, root, limit)
+                 for s in registry}
+    currents = {s.name: current_point(s.artifact, root) for s in registry}
+    return evaluate(registry, histories, currents)
+
+
+# ---------------------------------------------------------------------------
+# consolidated artifact + trend report
+# ---------------------------------------------------------------------------
+
+def consolidate(registry: Sequence[BenchSpec],
+                histories: Dict[str, List[Dict[str, Any]]],
+                currents: Dict[str, Optional[Dict[str, Any]]]) \
+        -> Dict[str, Any]:
+    """One time-series document: per bench, per metric, the value at
+    every commit plus the current run."""
+    out: Dict[str, Any] = {"schema": SCHEMA_TRAJECTORY, "benches": {}}
+    for spec in registry:
+        points = histories.get(spec.name, [])
+        cur = currents.get(spec.name)
+        bench: Dict[str, Any] = {
+            "artifact": spec.artifact,
+            "commits": [{"commit": p["commit"],
+                         "committed_unix": p.get("committed_unix"),
+                         "generated_at": p["data"].get("generated_at")}
+                        for p in points],
+            "metrics": {},
+        }
+        for metric in spec.metrics:
+            bench["metrics"][metric.path] = {
+                "direction": metric.direction,
+                "rel_tol": metric.rel_tol,
+                "gate": metric.gate,
+                "series": [resolve_path(p["data"], metric.path)
+                           for p in points],
+                "current": (resolve_path(cur["data"], metric.path)
+                            if cur else None),
+            }
+        out["benches"][spec.name] = bench
+    return out
+
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: Sequence[Optional[float]]) -> str:
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    rng = hi - lo
+    out = []
+    for v in values:
+        if v is None:
+            out.append("·")
+        elif rng == 0:
+            out.append(_SPARK[3])
+        else:
+            out.append(_SPARK[min(7, int(8 * (v - lo) / rng))])
+    return "".join(out)
+
+
+_STATUS_MARK = {"ok": "ok", "new": "new", "no-data": "—",
+                "regression": "REGRESSION",
+                "watch-regression": "watch(worse)"}
+
+
+def render_markdown(report: TrajectoryReport) -> str:
+    lines = ["# perf trajectory", "",
+             "baseline = median of the last "
+             f"{BASELINE_WINDOW} committed points; gated metrics fail "
+             "CI when the current value is worse than baseline by more "
+             "than the tolerance.", "",
+             "| bench | metric | dir | tol | trend | baseline | current "
+             "| status |",
+             "|---|---|---|---|---|---|---|---|"]
+    for v in report.verdicts:
+        m = v.metric
+        fmt = (lambda x: "—" if x is None else f"{x:g}")
+        lines.append(
+            f"| {v.bench} | `{m.path}` | {m.direction} "
+            f"| {'gate ' if m.gate else 'watch '}{m.rel_tol:g} "
+            f"| `{sparkline(v.series + [v.current])}` "
+            f"| {fmt(v.baseline)} | {fmt(v.current)} "
+            f"| {_STATUS_MARK.get(v.status, v.status)} |")
+    lines.append("")
+    if report.regressions:
+        lines.append("## regressions")
+        lines.extend(f"- **{v.bench}** `{v.metric.path}`: {v.detail}"
+                     for v in report.regressions)
+    else:
+        lines.append(f"no gated regressions across "
+                     f"{len(report.verdicts)} metrics.")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def render_ascii(report: TrajectoryReport) -> str:
+    lines = ["== perf trajectory =="]
+    for v in report.verdicts:
+        cur = "—" if v.current is None else f"{v.current:g}"
+        base = "—" if v.baseline is None else f"{v.baseline:g}"
+        mode = "gate" if v.metric.gate else "watch"
+        lines.append(
+            f"  {v.bench:<12} {v.metric.path:<42} "
+            f"{sparkline(v.series + [v.current]):<12} "
+            f"{base:>12} -> {cur:<12} [{mode}] "
+            f"{_STATUS_MARK.get(v.status, v.status)}")
+        if v.failed or v.status == "watch-regression":
+            lines.append(f"      {v.detail}")
+    n = sum(report.n_commits.values())
+    lines.append(f"  ({len(report.verdicts)} metrics, {n} artifact "
+                 f"versions across history; "
+                 f"{len(report.regressions)} gated regressions)")
+    return "\n".join(lines)
+
+
+def run_trajectory(out_dir: str = "experiments/runtime/trajectory",
+                   root: str = ".", gate: bool = True,
+                   registry: Optional[Sequence[BenchSpec]] = None) -> int:
+    """CLI body: consolidate + render + (optionally) gate.
+
+    Writes ``trajectory.json`` (the consolidated time-series) and
+    ``trend.md`` under ``out_dir``; prints the ASCII report; returns
+    exit status 1 when ``gate`` and any gated metric regressed.
+    """
+    import datetime
+
+    if registry is None:
+        import sys
+        sys.path.insert(0, root)         # benchmarks/ package lives at repo root
+        from benchmarks.run import REGISTRY as registry  # type: ignore
+
+    histories = {s.name: artifact_history(s.artifact, root)
+                 for s in registry}
+    currents = {s.name: current_point(s.artifact, root) for s in registry}
+    report = evaluate(registry, histories, currents)
+    doc = consolidate(registry, histories, currents)
+    doc["generated_at"] = datetime.datetime.now(
+        datetime.timezone.utc).isoformat()
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "trajectory.json"), "w") as fh:
+        json.dump(doc, fh, indent=1)
+    with open(os.path.join(out_dir, "trend.md"), "w") as fh:
+        fh.write(render_markdown(report))
+    print(render_ascii(report))
+    print(f"artifacts: {out_dir}/trajectory.json, {out_dir}/trend.md")
+    if gate and not report.ok:
+        print(f"TRAJECTORY GATE FAILED: {len(report.regressions)} "
+              "regression(s)")
+        return 1
+    return 0

@@ -100,6 +100,9 @@ class SolveEngine:
         self._next_rid = 0
         self._rr = 0                     # round-robin cursor
         self._expired: List[RequestResult] = []
+        #: ProfileReport of the most recent profiled run()
+        #: (``ServiceConfig.profile_dir``); None otherwise
+        self.last_profile = None
 
     # -- registration / submission ---------------------------------------
     def register(self, op, precond=None, name: Optional[str] = None) -> str:
@@ -139,11 +142,43 @@ class SolveEngine:
 
     def run(self) -> List[RequestResult]:
         """Drain all queues and blocks; completed requests in retirement
-        order."""
+        order.
+
+        With ``ServiceConfig.profile_dir`` set, the whole drain runs
+        inside a :mod:`repro.observe.profile` capture window: the step/
+        splice programs the chunks execute are noted for HLO phase
+        mapping, and the analyzed report lands on ``self.last_profile``
+        + ``profile_dir/profile.json``.  Results are identical.
+        """
+        if self.scfg.profile_dir:
+            return self._run_profiled()
+        return self._drain()
+
+    def _drain(self) -> List[RequestResult]:
         out: List[RequestResult] = []
         while self.has_work():
             out.extend(self.poll())
         out.extend(self._take_expired())
+        return out
+
+    def _run_profiled(self) -> List[RequestResult]:
+        import os
+
+        import jax
+
+        from repro.observe import profile as _profile
+
+        with _profile.capture(self.scfg.profile_dir) as cap:
+            out = self._drain()
+            # the ONE host read per chunk already synchronized; this
+            # only fences stragglers before the window closes
+            for blk in self._blocks.values():
+                if blk is not None:
+                    jax.block_until_ready(blk.state)
+        rep = cap.analyze(label=f"engine/{self.scfg.substrate}")
+        rep.save(os.path.join(self.scfg.profile_dir, "profile.json"))
+        cap.save_hlo_map()
+        self.last_profile = rep
         return out
 
     def poll(self) -> List[RequestResult]:

@@ -55,6 +55,15 @@ class ServiceConfig:
         ``RequestResult.trace``, harvested at chunk boundaries with the
         ONE host read the engine already does — zero extra
         synchronizations on the device path.
+      profile_dir: when set, :meth:`repro.service.SolveEngine.run`
+        wraps its drain loop in a :mod:`repro.observe.profile` capture
+        window: the device timeline + HLO phase map land under this
+        directory, and the per-phase/overlap :class:`~repro.observe
+        .profile.ProfileReport` is attached as ``engine.last_profile``
+        (and written to ``profile_dir/profile.json``).  Serving
+        behavior and results are unchanged; use for one diagnostic run,
+        not steady-state serving (the capture holds the whole timeline
+        in memory).
     """
 
     max_batch: int = 8
@@ -64,6 +73,7 @@ class ServiceConfig:
     maxiter: int = 10_000
     recovery: Optional[RecoveryPolicy] = None
     trace_cap: int = 0
+    profile_dir: Optional[str] = None
 
 
 @dataclasses.dataclass

@@ -1,0 +1,208 @@
+"""repro.observe.trajectory: path resolution, baseline math, the
+regression gate failing on an injected synthetic regression, and the
+benchmarks/run.py registry's consistency with the committed artifacts.
+
+All evaluation tests are pure (no git, no device): histories are passed
+in as already-loaded artifact points.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.observe import trajectory as T
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+
+
+# ---------------------------------------------------------------------------
+# path resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_path_nested_and_list():
+    doc = {"a": {"b": [10, {"c": 2.5}]}}
+    assert T.resolve_path(doc, "a/b/0") == 10.0
+    assert T.resolve_path(doc, "a/b/1/c") == 2.5
+
+
+def test_resolve_path_dotted_keys_work_with_slash_separator():
+    # bench_rr keys contain dots ("hard_sr3.0") — the reason paths are
+    # slash-separated
+    doc = {"claims": {"hard_sr3.0": {"rr_truthful": True}}}
+    assert T.resolve_path(doc, "claims/hard_sr3.0/rr_truthful") == 1.0
+
+
+def test_resolve_path_bool_and_missing():
+    assert T.resolve_path({"ok": False}, "ok") == 0.0
+    assert T.resolve_path({"ok": True}, "nope") is None
+    assert T.resolve_path({"s": "text"}, "s") is None
+    assert T.resolve_path({"a": [1]}, "a/7") is None
+
+
+# ---------------------------------------------------------------------------
+# evaluate_metric
+# ---------------------------------------------------------------------------
+
+def _m(**kw):
+    kw.setdefault("path", "x")
+    return T.Metric(**kw)
+
+
+def test_stable_history_is_ok():
+    v = T.evaluate_metric(_m(direction="higher", rel_tol=0.1),
+                          [10.0, 10.0, 10.0], 10.0)
+    assert v.status == "ok" and not v.failed
+    assert v.baseline == 10.0
+
+
+def test_injected_regression_fails_gate():
+    # the satellite requirement: a synthetic regression must trip the gate
+    v = T.evaluate_metric(_m(direction="higher", rel_tol=0.1, gate=True),
+                          [10.0, 10.0, 10.0], 5.0)
+    assert v.status == "regression" and v.failed
+
+
+def test_lower_is_better_direction():
+    v = T.evaluate_metric(_m(direction="lower", rel_tol=0.1),
+                          [100.0], 130.0)
+    assert v.failed
+    v = T.evaluate_metric(_m(direction="lower", rel_tol=0.1),
+                          [100.0], 105.0)
+    assert v.status == "ok"
+
+
+def test_improvement_never_fails():
+    v = T.evaluate_metric(_m(direction="lower", rel_tol=0.0),
+                          [100.0], 50.0)
+    assert v.status == "ok"
+
+
+def test_watch_metric_never_fails_the_gate():
+    v = T.evaluate_metric(_m(direction="higher", rel_tol=0.1, gate=False),
+                          [10.0, 10.0], 1.0)
+    assert v.status == "watch-regression" and not v.failed
+
+
+def test_boolean_claim_flip_trips_zero_tolerance():
+    v = T.evaluate_metric(_m(direction="higher", rel_tol=0.0),
+                          [1.0, 1.0], 0.0)
+    assert v.failed
+
+
+def test_baseline_is_median_of_last_window():
+    # one poisoned historical point must not move the median baseline
+    hist = [10.0, 10.0, 1000.0, 10.0, 10.0, 10.0]
+    v = T.evaluate_metric(_m(direction="higher", rel_tol=0.1), hist, 10.0)
+    assert v.baseline == 10.0 and v.status == "ok"
+
+
+def test_missing_history_and_current():
+    v = T.evaluate_metric(_m(), [], 5.0)
+    assert v.status == "new" and not v.failed
+    v = T.evaluate_metric(_m(), [5.0], None)
+    assert v.status == "no-data" and not v.failed
+
+
+def test_bad_direction_rejected():
+    with pytest.raises(ValueError):
+        T.Metric(path="x", direction="sideways")
+
+
+# ---------------------------------------------------------------------------
+# evaluate + report over a synthetic registry
+# ---------------------------------------------------------------------------
+
+def _fixture_registry():
+    return [T.BenchSpec(
+        "fake", "benchmarks.fake", "fake.json",
+        metrics=(T.Metric("speed", "higher", 0.1, gate=True),
+                 T.Metric("wall_s", "lower", 0.25, gate=False)))]
+
+
+def _points(values):
+    return [{"commit": f"c{i}", "committed_unix": i,
+             "data": {"speed": v, "wall_s": 1.0}}
+            for i, v in enumerate(values)]
+
+
+def test_evaluate_gate_fails_on_injected_regression():
+    reg = _fixture_registry()
+    histories = {"fake": _points([10.0, 10.0, 10.0])}
+    ok = T.evaluate(reg, histories,
+                    {"fake": {"commit": None,
+                              "data": {"speed": 10.0, "wall_s": 1.0}}})
+    assert ok.ok and not ok.regressions
+    bad = T.evaluate(reg, histories,
+                     {"fake": {"commit": None,
+                               "data": {"speed": 4.0, "wall_s": 1.0}}})
+    assert not bad.ok
+    assert [v.metric.path for v in bad.regressions] == ["speed"]
+
+
+def test_render_flags_regression():
+    reg = _fixture_registry()
+    rep = T.evaluate(reg, {"fake": _points([10.0, 10.0])},
+                     {"fake": {"commit": None,
+                               "data": {"speed": 1.0, "wall_s": 9.0}}})
+    md = T.render_markdown(rep)
+    txt = T.render_ascii(rep)
+    assert "REGRESSION" in md and "## regressions" in md
+    assert "REGRESSION" in txt and "watch(worse)" in txt
+
+
+def test_consolidate_structure():
+    reg = _fixture_registry()
+    doc = T.consolidate(reg, {"fake": _points([1.0, 2.0])},
+                        {"fake": {"commit": None,
+                                  "data": {"speed": 3.0, "wall_s": 1.0}}})
+    assert doc["schema"] == T.SCHEMA_TRAJECTORY
+    fake = doc["benches"]["fake"]
+    assert fake["metrics"]["speed"]["series"] == [1.0, 2.0]
+    assert fake["metrics"]["speed"]["current"] == 3.0
+    assert len(fake["commits"]) == 2
+
+
+def test_sparkline_shapes():
+    assert T.sparkline([]) == ""
+    assert T.sparkline([1.0, None, 2.0])[1] == "·"
+    s = T.sparkline([0.0, 1.0])
+    assert s[0] == "▁" and s[-1] == "█"
+
+
+# ---------------------------------------------------------------------------
+# the real registry vs the committed artifacts
+# ---------------------------------------------------------------------------
+
+def _real_registry():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks.run import REGISTRY
+    return REGISTRY
+
+
+def test_registry_artifacts_exist_and_gated_paths_resolve():
+    """Every registered artifact is committed and every *gated* metric
+    path resolves in it — a typo in benchmarks/run.py would silently
+    disarm the gate otherwise."""
+    for spec in _real_registry():
+        path = os.path.join(REPO, "experiments", spec.artifact)
+        assert os.path.exists(path), f"missing artifact {spec.artifact}"
+        with open(path) as fh:
+            data = json.load(fh)
+        assert str(data.get("schema", "")).startswith("repro.benchmarks/")
+        for metric in spec.metrics:
+            if metric.gate:
+                assert T.resolve_path(data, metric.path) is not None, \
+                    f"{spec.name}: gated path {metric.path} unresolvable"
+
+
+def test_git_history_consolidation_runs_here():
+    """artifact_history over this repo's own git log returns committed
+    points for a long-standing artifact (device-free, but needs git)."""
+    pts = T.artifact_history("bench_cost.json", root=REPO, limit=10)
+    if not pts:
+        pytest.skip("no git history available (shallow checkout?)")
+    assert all("data" in p and p["commit"] for p in pts)
+    assert T.resolve_path(pts[-1]["data"],
+                          "p-bicgsafe/measured/sync_phases") == 1.0

@@ -17,29 +17,35 @@ import numpy as np  # noqa: E402
 
 import repro  # noqa: E402
 from repro.core import SolverConfig  # noqa: E402
-from repro.core import matrices as M  # noqa: E402
+from repro.scenarios import OperatorSpec, build_problem  # noqa: E402
 
 from .common import fmt_table, write_json  # noqa: E402
 
 METHODS = ["p-bicgsafe", "ssbicgsafe2", "bicgstab", "p-bicgstab", "gpbicg",
            "cgs"]
 
-# Generated analogues of the paper's SuiteSparse kinds (Table 5.1)
+# Generated analogues of the paper's SuiteSparse kinds (Table 5.1),
+# built through the scenario registry's operator plugins — ONE
+# definition per problem family (repro.scenarios.builtin).
 PROBLEMS = {
     # fluid dynamics, non-symmetric (atmosmodd / poisson3Db kind)
-    "convdiff_24": lambda: M.convection_diffusion(24, peclet=1.0),
-    "convdiff_32_pe2": lambda: M.convection_diffusion(32, peclet=2.0),
-    "poisson_32": lambda: M.poisson3d(32),
+    "convdiff_24": OperatorSpec.of("convection_diffusion", nx=24,
+                                   peclet=1.0),
+    "convdiff_32_pe2": OperatorSpec.of("convection_diffusion", nx=32,
+                                       peclet=2.0),
+    "poisson_32": OperatorSpec.of("poisson3d", nx=32),
     # structural, badly scaled SPD (s3dkq4m2 kind)
-    "aniso_24": lambda: M.anisotropic3d(24, eps=1e-2),
-    "aniso_20_hard": lambda: M.anisotropic3d(20, eps=1e-3),
+    "aniso_24": OperatorSpec.of("anisotropic3d", nx=24, eps=1e-2),
+    "aniso_20_hard": OperatorSpec.of("anisotropic3d", nx=20, eps=1e-3),
     # generic sparse non-symmetric (xenon2 / epb3 kind)
-    "random_20k": lambda: M.random_nonsym(20_000, 9, seed=5,
-                                          diag_dominance=1.02),
-    "random_50k": lambda: M.random_nonsym(50_000, 7, seed=9,
-                                          diag_dominance=1.05),
+    "random_20k": OperatorSpec.of("random_nonsym", n=20_000,
+                                  nnz_per_row=9, seed=5,
+                                  diag_dominance=1.02),
+    "random_50k": OperatorSpec.of("random_nonsym", n=50_000,
+                                  nnz_per_row=7, seed=9,
+                                  diag_dominance=1.05),
     # dense non-normal
-    "nonsym_dense_400": lambda: M.nonsym_dense(400, skew=0.8),
+    "nonsym_dense_400": OperatorSpec.of("nonsym_dense", n=400, skew=0.8),
 }
 
 
@@ -47,8 +53,8 @@ def run(quick: bool = False):
     problems = dict(list(PROBLEMS.items())[:4]) if quick else PROBLEMS
     rows = []
     histories = {}
-    for pname, gen in problems.items():
-        op, b, xt = gen()
+    for pname, spec in problems.items():
+        op, b, xt = build_problem(spec)
         row = [pname, op.shape[0]]
         for mname in METHODS:
             cfg = SolverConfig(tol=1e-8, maxiter=10_000,

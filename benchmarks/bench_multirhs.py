@@ -28,8 +28,9 @@ jax.config.update("jax_enable_x64", True)
 
 
 def _problem(nx: int):
-    from repro.core import matrices as M
-    return M.convection_diffusion(nx, peclet=1.0)
+    # the scenario registry's operator plugin (one shared definition)
+    from repro.scenarios import build_problem
+    return build_problem("convection_diffusion", nx=nx, peclet=1.0)
 
 
 def _rhs_block(b, m: int):

@@ -36,13 +36,16 @@ def _time(fn, reps: int = 3, warm: bool = False) -> float:
 
 
 def _problems(quick: bool):
-    from repro.core import matrices as M
+    # built through the scenario registry's operator plugins (ONE
+    # definition per problem family; cached per spec content)
+    from repro.scenarios import build_problem
     n_hard = 300 if quick else 900
     nx = 8 if quick else 14
     return {
-        "hard_nonsym": M.hard_nonsym(n=n_hard),
-        "anisotropic3d": M.anisotropic3d(nx, eps=1e-2),
-        "convdiff": M.convection_diffusion(nx, peclet=1.0),
+        "hard_nonsym": build_problem("hard_nonsym", n=n_hard),
+        "anisotropic3d": build_problem("anisotropic3d", nx=nx, eps=1e-2),
+        "convdiff": build_problem("convection_diffusion", nx=nx,
+                                  peclet=1.0),
     }
 
 

@@ -1,0 +1,41 @@
+"""Scenario matrix sweep through the benchmark harness.
+
+Thin wrapper over ``repro.scenarios.sweep`` (the same runner behind
+``python -m repro.scenarios sweep``): runs the registered scenario
+subset — every cell solved through its declared binding, verified by
+its operator plugin's oracle, and statically contract-checked — and
+writes the ONE consolidated artifact the perf-trajectory gate
+regresses.
+
+Artifact: experiments/scenario_sweep.json (schema
+``repro.scenarios/scenario_sweep/v1``); gated metrics in
+benchmarks/run.py: cell count and the oracle/contract claims (fatal),
+wall clock (watch-only).
+
+  PYTHONPATH=src python -m benchmarks.run --only scenarios
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def run(quick: bool = False):
+    from repro.scenarios.sweep import (DEFAULT_OUT, run_sweep, sweep_table,
+                                       write_artifact)
+
+    print("\n== bench_scenarios (declarative matrix sweep) ==")
+    art = run_sweep(quick=quick)
+    out = write_artifact(art, DEFAULT_OUT)
+    print(sweep_table(art))
+    print(f"artifact: {out}")
+    assert art["claims"]["all_oracle_ok"], \
+        "scenario sweep: oracle verification failed (see table)"
+    assert art["claims"]["all_contracts_ok"], \
+        "scenario sweep: contract deviation (see table)"
+    return art
+
+
+if __name__ == "__main__":
+    run()

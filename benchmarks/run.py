@@ -19,6 +19,8 @@
                                             fault-injection recovery)
   bench_observe       observability        (trace/metrics overhead
                                             budget, session + engine)
+  bench_scenarios     scenario registry    (declarative matrix sweep:
+                                            oracle + contract claims)
 
 Artifacts land in experiments/*.json; stdout is the human summary.
 
@@ -143,6 +145,20 @@ REGISTRY = (
             Metric("trajectory/block_jacobi/iterations", "lower", 0.25,
                    gate=True,
                    note="preconditioned iteration count (fp-drift slack)"),
+        )),
+    BenchSpec(
+        "scenarios", "benchmarks.bench_scenarios", "scenario_sweep.json",
+        metrics=(
+            Metric("summary/n_cells", "higher", 0.0, gate=True,
+                   note="registered scenario coverage never shrinks"),
+            Metric("claims/all_oracle_ok", "higher", 0.0, gate=True,
+                   note="every cell's solution verified by its operator "
+                        "plugin's oracle"),
+            Metric("claims/all_contracts_ok", "higher", 0.0, gate=True,
+                   note="every cell matches the expected contract "
+                        "matrix (+ plugin deltas)"),
+            Metric("summary/wall_s", "lower", 0.5, gate=False,
+                   note="whole-sweep wall clock (machine noise)"),
         )),
     BenchSpec(
         "service", "benchmarks.bench_service", "bench_service.json",

@@ -18,6 +18,12 @@ via :func:`make_solver`, :func:`solve`, or the continuous-batching
 solve service (:mod:`repro.service`), whose registry consumes the same
 cache.
 
+The whole regression matrix — operator class x method x substrate x
+precond x guard x batch — is declarative data (:mod:`repro.scenarios`):
+register a :class:`Scenario` once and it becomes a cached session
+(``make_solver(scenario="poisson-jacobi")``), a contract-audit row, and
+a ``python -m repro.scenarios sweep`` cell.
+
 Layers underneath: :mod:`repro.core` (the paper's solvers, operators,
 batched/distributed drivers), :mod:`repro.kernels` (Pallas hot-loop
 kernels), :mod:`repro.precond` (preconditioners inside the overlap
@@ -33,6 +39,8 @@ from repro.core import (SOLVERS, CSROperator, DenseOperator, ELLOperator,
                         Stencil7Operator, SUBSTRATES, get_substrate)
 from repro.observe import ConvergenceTrace
 from repro.resilience import GuardedSolver, RecoveryPolicy, SolveStatus
+from repro.scenarios import (OperatorSpec, Scenario, register_operator_class,
+                             register_scenario)
 
 __all__ = [
     # the front door
@@ -43,6 +51,9 @@ __all__ = [
     "DenseOperator", "CSROperator", "ELLOperator", "Stencil7Operator",
     "Preconditioner",
     "SUBSTRATES", "get_substrate",
+    # the scenario registry (repro.scenarios; make_solver(scenario=...))
+    "Scenario", "OperatorSpec", "register_scenario",
+    "register_operator_class",
     # guarded solves (repro.resilience; make_solver(recovery=...))
     "SolveStatus", "RecoveryPolicy", "GuardedSolver",
     # observability (repro.observe; solve(trace=True))

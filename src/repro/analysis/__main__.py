@@ -5,6 +5,13 @@ only, zero solver executions), prints the human-readable contract
 table, writes ``experiments/contract_audit.json``, and exits non-zero
 when any cell deviates from the paper-expected outcome matrix.  This is
 the CI ``analysis-audit`` job.
+
+The cell list is derived from the scenario registry
+(:mod:`repro.scenarios`): every registered scenario contributes one
+contract row on top of the dense acceptance matrix, and ``--scenarios
+FILE`` registers extra scenario dicts for this run.  Scenario problems
+— an unregistered operator class, an unknown preconditioner — exit
+with a one-line message (exit code 2), never a traceback.
 """
 import argparse
 import json
@@ -27,6 +34,10 @@ def main(argv=None):
     audit_p.add_argument("--devices", type=int, default=8,
                          help="fake host devices for the mesh smoke "
                          "(default: %(default)s; set BEFORE jax imports)")
+    audit_p.add_argument("--scenarios", default=None, metavar="FILE",
+                         help="JSON file with extra scenario dicts to "
+                         "register before the audit (each becomes one "
+                         "contract row)")
     args = ap.parse_args(argv)
 
     # The mesh smoke needs the fake devices staged before the XLA
@@ -51,8 +62,17 @@ def main(argv=None):
                  + list(argv if argv is not None else sys.argv[1:]))
 
     from repro.analysis.audit import audit_table, run_audit
+    from repro.scenarios import ScenarioError
 
-    artifact = run_audit(quick=args.quick, mesh_smoke=not args.no_mesh)
+    try:
+        if args.scenarios:
+            from repro.scenarios.__main__ import _register_file
+            _register_file(args.scenarios)
+        artifact = run_audit(quick=args.quick,
+                             mesh_smoke=not args.no_mesh)
+    except ScenarioError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     out = args.out
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)

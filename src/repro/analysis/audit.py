@@ -21,7 +21,7 @@ test and uploaded by the CI ``analysis-audit`` job.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -86,31 +86,20 @@ def _audit_operator(nx=8, ny=6, nz=6, dtype=None):
 
 
 def audit_specs(quick: bool = False) -> List[dict]:
-    """The trace_binding kwargs for every audit cell.
+    """The trace_binding kwargs for every audit cell — derived from the
+    scenario registry (:mod:`repro.scenarios.cells`).
 
-    The core matrix is identical in quick and full mode (the acceptance
-    surface: 7 methods x 2 substrates x guard x precond + open-loop +
-    mesh smoke); full mode widens the preconditioner axis to the kernel-
-    dispatching ones (ssor, block_jacobi).
+    The dense acceptance matrix is identical in quick and full mode
+    (7 methods x 2 substrates x guard x precond + open-loop; full mode
+    widens the preconditioner axis to the kernel-dispatching ones), and
+    every REGISTERED scenario contributes one extra row carrying its
+    operator class and its plugin's expected-outcome overrides — so a
+    new scenario (or a new operator-class plugin) lands under the
+    contract audit by registration alone.
     """
-    preconds: Tuple = (None, "jacobi") if quick \
-        else (None, "jacobi", "ssor", "block_jacobi")
-    cells: List[dict] = []
-    for method in METHOD_ORDER:
-        binding = "batched" if method == "p-bicgsafe" else "single"
-        for substrate in SUBSTRATE_ORDER:
-            for guard in (False, True):
-                for precond in preconds:
-                    cells.append(dict(method=method, binding=binding,
-                                      substrate=substrate, guard=guard,
-                                      precond=precond))
-    # the service's open-loop chunk program (p-BiCGSafe only)
-    for substrate in SUBSTRATE_ORDER:
-        for guard in (False, True):
-            cells.append(dict(method="p-bicgsafe", binding="open_loop",
-                              substrate=substrate, guard=guard,
-                              precond=None))
-    return cells
+    # lazy both ways: neither package imports the other at module scope
+    from repro.scenarios import contract_cells
+    return contract_cells(quick=quick)
 
 
 def _mesh_specs() -> List[dict]:
@@ -157,24 +146,36 @@ def run_audit(quick: bool = False,
     deviations: List[dict] = []
 
     def run_cell(kw, operator, mesh=None):
+        # registry-driven rows resolve their operator through the
+        # scenario plugin (unregistered classes fail loudly there) and
+        # merge the plugin's declared expected-outcome deltas
+        if kw.get("operator_class"):
+            from repro.scenarios import build_problem
+            operator = build_problem(kw["operator_class"],
+                                     **(kw.get("operator_params") or {}))[0]
         tb = trace_binding(kw["method"], operator, binding=kw["binding"],
                            substrate=kw["substrate"], guard=kw["guard"],
                            precond=kw["precond"], m=3, mesh=mesh)
         rep = run_passes(tb, names=contracts)
         exp = expected_outcomes(tb.spec)
+        exp.update(kw.get("expected") or {})
         devs = []
         for f in rep.findings:
             want = exp.get(f.contract)
             if want is not None and f.status != want:
                 devs.append({"binding": tb.spec.label,
+                             "scenario": kw.get("scenario"),
                              "contract": f.contract,
                              "expected": want, "actual": f.status,
                              "detail": f.detail})
         reports.append(rep)
         deviations.extend(devs)
         rec = rep.to_dict()
+        if kw.get("scenario"):
+            rec["scenario"] = kw["scenario"]
+            rec["operator_class"] = kw["operator_class"]
         rec["expected"] = {f.contract: exp.get(f.contract)
-                           for f in rep.findings}
+                          for f in rep.findings}
         rec["deviations"] = devs
         records.append(rec)
 
@@ -214,6 +215,7 @@ def run_audit(quick: bool = False,
         "n_devices": len(jax.devices()),
         "n_cells": len(reports),
         "n_mesh_cells": n_mesh,
+        "n_scenario_cells": sum(1 for c in cells if c.get("scenario")),
         "methods": list(METHOD_ORDER),
         "substrates": list(SUBSTRATE_ORDER),
         "contracts": contract_names,

@@ -840,6 +840,7 @@ def _substrate_cache_name(sub) -> Optional[str]:
 
 
 def make_solver(method: str = "p-bicgsafe", operator=None, *,
+                scenario=None,
                 precond: PrecondLike = None,
                 substrate: SubstrateLike = "jnp",
                 config: SolverConfig = SolverConfig(),
@@ -852,6 +853,14 @@ def make_solver(method: str = "p-bicgsafe", operator=None, *,
     Args:
       method: a name from :data:`repro.core.SOLVERS`
         (default ``"p-bicgsafe"``, the paper's method).
+      scenario: a registered scenario name or :class:`repro.scenarios
+        .Scenario` — the declarative spelling of this whole call: the
+        operator is built through its plugin (cached per spec content)
+        and method/precond/substrate/config/recovery come from the
+        scenario, so every other argument must be left at its default.
+        ``make_solver(scenario="poisson-jacobi")`` is
+        ``Scenario.bind()`` through the front door, and hits the same
+        session cache.
       operator: operator object (Dense/CSR/ELL/Stencil7), dense matrix,
         or bare matvec callable.  Content-addressable operators make the
         session cacheable; callables do not (name-spec preconditioners
@@ -884,6 +893,18 @@ def make_solver(method: str = "p-bicgsafe", operator=None, *,
     are thin, host-side objects built per call; the guarded *session*
     underneath is cached by the same content key.
     """
+    if scenario is not None:
+        # lazy: repro.scenarios imports this module's public surface
+        from repro.scenarios import resolve_scenario
+        if operator is not None or method != "p-bicgsafe" \
+                or precond is not None or substrate != "jnp" \
+                or config != SolverConfig() or dot_reduce is not None \
+                or blocked or recovery is not None:
+            raise TypeError(
+                "make_solver(scenario=...) is exclusive: the scenario "
+                "declares the operator, method, precond, substrate, "
+                "config and recovery — pass nothing else")
+        return resolve_scenario(scenario).bind()
     if operator is None:
         raise TypeError("make_solver requires an operator")
     if recovery is not None and recovery is not False:

@@ -1,0 +1,70 @@
+"""repro.scenarios — the declarative scenario registry + matrix sweep.
+
+The regression surface of this repo is a matrix: operator class x
+method x substrate x precond x guard/recovery x batch x binding.  This
+package writes the cells down as data:
+
+    from repro.scenarios import Scenario, OperatorSpec, register_scenario
+
+    register_scenario(Scenario(
+        "poisson-jacobi", OperatorSpec.of("poisson3d", nx=8),
+        precond="jacobi"))
+
+    solver = repro.make_solver(scenario="poisson-jacobi")   # cached session
+    x = solver.solve(b)
+
+One registration buys three things:
+
+* a session: ``Scenario.bind()`` / ``make_solver(scenario=...)``
+  materializes the cell through the PR-5 content-keyed cache;
+* a contract row: ``repro.analysis audit`` derives its cell list from
+  this registry, so every scenario is statically held to the paper's
+  communication invariants in CI (plugins may declare expected-outcome
+  deltas);
+* a sweep cell: ``python -m repro.scenarios sweep`` runs the subset and
+  emits ONE consolidated ``experiments/scenario_sweep.json`` the
+  trajectory gate regresses.
+
+Operator classes are **plugins** (builder + verification oracle +
+expected contract outcomes): :mod:`~repro.scenarios.builtin` registers
+the seed generators, and :mod:`~repro.scenarios.helmholtz` registers a
+complex-shifted Helmholtz class entirely from the outside — no edits
+under ``src/repro/core/``.
+"""
+from . import builtin as _builtin          # registers the seed classes
+from . import helmholtz as _helmholtz      # the plugin-proof class
+from . import seeds as _seeds              # registers the seed scenarios
+from .helmholtz import HelmholtzShiftedOperator
+from .registry import (OPERATOR_CLASSES, SCENARIOS, OperatorPlugin,
+                       build_problem, default_oracle, get_operator_class,
+                       get_scenario, operator_class_names,
+                       register_operator_class, register_scenario,
+                       resolve_scenario, scenario_names, scenarios)
+from .types import BINDINGS, OperatorSpec, Scenario, ScenarioError
+
+__all__ = [
+    "Scenario", "OperatorSpec", "ScenarioError", "BINDINGS",
+    "OperatorPlugin", "HelmholtzShiftedOperator",
+    "register_scenario", "register_operator_class",
+    "get_scenario", "get_operator_class", "resolve_scenario",
+    "scenarios", "scenario_names", "operator_class_names",
+    "build_problem", "default_oracle",
+    "SCENARIOS", "OPERATOR_CLASSES",
+    "contract_cells", "run_sweep",
+]
+
+del _builtin, _helmholtz, _seeds
+
+
+def contract_cells(quick: bool = False):
+    """Audit cells (dense matrix + per-scenario rows); see
+    :mod:`repro.scenarios.cells`."""
+    from .cells import contract_cells as _cc
+    return _cc(quick=quick)
+
+
+def run_sweep(quick: bool = False, **kw):
+    """Run the matrix sweep; see :mod:`repro.scenarios.sweep` (lazy —
+    importing the registry must not pull the runner/analysis stack)."""
+    from .sweep import run_sweep as _rs
+    return _rs(quick=quick, **kw)

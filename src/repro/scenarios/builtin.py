@@ -1,0 +1,71 @@
+"""The seed operator classes, registered from :mod:`repro.core.matrices`.
+
+ONE definition per problem family: the benchmarks
+(``bench_convergence``, ``bench_precond``, ``bench_multirhs``) and the
+substrate-parity tests build their operators through these plugins
+(:func:`repro.scenarios.build_problem`) instead of each importing and
+parameterizing the generators themselves.  The generators stay where
+they are — these plugins are the registry's (cached, spec-addressed)
+view onto them.
+
+All seed classes satisfy the paper's expected contract matrix as-is
+(``contract_overrides`` empty); the stencil families are mesh-capable
+(the row-sharded halo format).
+"""
+from __future__ import annotations
+
+from .registry import register_operator_class
+
+
+def _m():
+    from repro.core import matrices
+    return matrices
+
+
+@register_operator_class("poisson3d", mesh_capable=True,
+                         description="SPD 7-point Laplacian (poisson3Db "
+                         "kind)")
+def _poisson3d(**kw):
+    return _m().poisson3d(**kw)
+
+
+@register_operator_class("convection_diffusion", mesh_capable=True,
+                         description="non-symmetric convection-diffusion "
+                         "stencil (atmosmodd kind)")
+def _convection_diffusion(**kw):
+    return _m().convection_diffusion(**kw)
+
+
+@register_operator_class("anisotropic3d", mesh_capable=True,
+                         description="badly scaled SPD stencil "
+                         "(s3dkq4m2 kind)")
+def _anisotropic3d(**kw):
+    return _m().anisotropic3d(**kw)
+
+
+@register_operator_class("random_nonsym",
+                         description="random sparse non-symmetric "
+                         "CSR/ELL (xenon2 kind)")
+def _random_nonsym(**kw):
+    return _m().random_nonsym(**kw)
+
+
+@register_operator_class("hard_nonsym",
+                         description="ill-conditioned non-symmetric "
+                         "dense (sherman3 kind, paper §5.2)")
+def _hard_nonsym(**kw):
+    return _m().hard_nonsym(**kw)
+
+
+@register_operator_class("spd_dense",
+                         description="small dense SPD with prescribed "
+                         "condition number")
+def _spd_dense(**kw):
+    return _m().spd_dense(**kw)
+
+
+@register_operator_class("nonsym_dense",
+                         description="small dense non-symmetric, "
+                         "well-conditioned")
+def _nonsym_dense(**kw):
+    return _m().nonsym_dense(**kw)

@@ -1,0 +1,61 @@
+"""The contract-audit cell list, derived from the registries.
+
+``repro.analysis``'s :func:`~repro.analysis.audit.audit_specs` delegates
+here: the audit's cell list is the dense acceptance matrix (every
+method x substrate x guard x precond + the open-loop chunk — unchanged,
+so the expected-outcome matrix and its negative controls stay anchored)
+PLUS one contract row per registered scenario.  Registering a scenario
+is therefore sufficient to put its exact binding coordinates — operator
+class included — under the paper's communication contracts in CI, with
+the plugin's ``contract_overrides`` merged over the expected matrix.
+
+Imports of :mod:`repro.analysis` stay lazy (the audit imports this
+module lazily too; neither package costs the other at import time).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .registry import scenarios
+
+__all__ = ["matrix_cells", "scenario_cells", "contract_cells"]
+
+
+def matrix_cells(quick: bool = False) -> List[dict]:
+    """The dense acceptance matrix (identical in quick and full mode:
+    7 methods x 2 substrates x guard x precond + open-loop); full mode
+    widens the preconditioner axis to the kernel-dispatching ones."""
+    from repro.analysis.audit import METHOD_ORDER, SUBSTRATE_ORDER
+    preconds = (None, "jacobi") if quick \
+        else (None, "jacobi", "ssor", "block_jacobi")
+    cells: List[dict] = []
+    for method in METHOD_ORDER:
+        binding = "batched" if method == "p-bicgsafe" else "single"
+        for substrate in SUBSTRATE_ORDER:
+            for guard in (False, True):
+                for precond in preconds:
+                    cells.append(dict(method=method, binding=binding,
+                                      substrate=substrate, guard=guard,
+                                      precond=precond))
+    # the service's open-loop chunk program (p-BiCGSafe only)
+    for substrate in SUBSTRATE_ORDER:
+        for guard in (False, True):
+            cells.append(dict(method="p-bicgsafe", binding="open_loop",
+                              substrate=substrate, guard=guard,
+                              precond=None))
+    return cells
+
+
+def scenario_cells(quick: bool = False) -> List[dict]:
+    """One audit cell per registered scenario (quick mode keeps the
+    quick-flagged ones).  Mesh-binding scenarios are excluded — the
+    audit's mesh smoke owns the sharded cells, whose operator extents
+    must match the live device count."""
+    return [sc.contract_cell() for sc in scenarios(quick=quick)
+            if sc.resolved_binding() != "mesh"]
+
+
+def contract_cells(quick: bool = False) -> List[dict]:
+    """Everything the audit traces (minus the mesh smoke): the dense
+    acceptance matrix, then the per-scenario rows."""
+    return matrix_cells(quick=quick) + scenario_cells(quick=quick)

@@ -1,0 +1,239 @@
+"""One-command matrix sweep: materialize, run, verify, consolidate.
+
+``run_sweep`` takes a subset of the registered scenarios and, per cell:
+
+1. builds the operator through its plugin (cached per spec content),
+2. binds the session via :func:`repro.api.make_solver` (the PR-5
+   content-keyed cache — scenarios sharing an operator share programs),
+3. runs the solve through the binding the scenario declares (single /
+   batched / open-loop chunks / sharded mesh),
+4. judges the solution with the plugin's verification oracle
+   (true-residual recomputation by default; e.g. the complex-residual
+   check for the Helmholtz class),
+5. statically traces the cell through the :mod:`repro.analysis`
+   contract passes and compares against the expected-outcome matrix
+   (with the plugin's declared deltas merged in).
+
+The result is ONE consolidated, schema-stamped artifact
+(``experiments/scenario_sweep.json``) whose claims the perf-trajectory
+gate regresses (benchmarks/run.py registers cell counts and pass/fail
+claims as gated metrics; wall clock is watch-only).
+"""
+from __future__ import annotations
+
+import json
+import time
+from datetime import datetime, timezone
+from typing import List, Optional, Sequence
+
+from .registry import build_problem, get_operator_class, resolve_scenario
+from .registry import scenarios as registered_scenarios
+from .types import Scenario, ScenarioError
+
+__all__ = ["run_sweep", "write_artifact", "sweep_table",
+           "ARTIFACT_SCHEMA", "DEFAULT_OUT"]
+
+ARTIFACT_SCHEMA = "repro.scenarios/scenario_sweep/v1"
+DEFAULT_OUT = "experiments/scenario_sweep.json"
+
+
+def _rhs_block(b, m: int):
+    """Column 0 is the unit-solution rhs (the oracle's x_true anchor);
+    the rest are seeded random vectors (the bench_multirhs protocol)."""
+    import jax
+    import jax.numpy as jnp
+    if m == 1:
+        return jnp.asarray(b)[:, None]
+    keys = jax.random.split(jax.random.PRNGKey(7), m)
+    cols = [b] + [jax.random.normal(k, b.shape, b.dtype)
+                  for k in keys[1:]]
+    return jnp.stack(cols, axis=1)
+
+
+def _build_mesh():
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    return Mesh(np.array(devs).reshape(len(devs)), ("x",))
+
+
+def _solve_cell(sc: Scenario, problem):
+    """Bind and run one scenario; returns (X, B, result) with X/B
+    normalized to (n, m) numpy arrays."""
+    import jax
+    import numpy as np
+    op, b, _ = problem
+    binding = sc.resolved_binding()
+    solver = sc.bind()
+    if binding == "single":
+        res = solver.solve(b)
+        X = np.asarray(res.x)[:, None]
+        B = np.asarray(b)[:, None]
+    elif binding == "batched":
+        B_dev = _rhs_block(b, sc.batch)
+        res = solver.solve_many(B_dev)
+        X, B = np.asarray(res.x), np.asarray(B_dev)
+    elif binding == "open_loop":
+        B_dev = _rhs_block(b, sc.batch)
+        st = solver.init(B_dev)
+        st = solver.step_chunk(st, sc.maxiter)
+        res = solver.result(st)
+        X, B = np.asarray(res.x), np.asarray(B_dev)
+    elif binding == "mesh":
+        grid = (op.nx, op.ny, op.nz)
+        dist = solver.on_mesh(_build_mesh())
+        res = dist.solve(b.reshape(grid))
+        X = np.asarray(res.x).reshape(-1)[:, None]
+        B = np.asarray(b)[:, None]
+    else:                               # pragma: no cover - validated
+        raise ScenarioError(f"unhandled binding {binding!r}")
+    jax.block_until_ready(res.x)
+    return X, B, res
+
+
+def _check_contracts(sc: Scenario, problem, mesh=None) -> dict:
+    """Trace this cell through the contract passes and diff against the
+    expected-outcome matrix + the plugin's declared deltas."""
+    from repro.analysis import run_passes, trace_binding
+    from repro.analysis.audit import expected_outcomes
+    cell = sc.contract_cell()
+    if cell["binding"] == "mesh" and mesh is None:
+        mesh = _build_mesh()
+    tb = trace_binding(cell["method"], problem[0],
+                       binding=cell["binding"],
+                       substrate=cell["substrate"], guard=cell["guard"],
+                       precond=cell["precond"], m=3, mesh=mesh)
+    rep = run_passes(tb)
+    exp = expected_outcomes(tb.spec)
+    exp.update(cell["expected"])
+    deviations = [
+        {"contract": f.contract, "expected": exp[f.contract],
+         "actual": f.status, "detail": f.detail}
+        for f in rep.findings
+        if f.contract in exp and f.status != exp[f.contract]]
+    return {"ok": not deviations, "deviations": deviations}
+
+
+def run_cell(sc: Scenario, contracts: bool = True) -> dict:
+    """Run ONE scenario end to end; returns its artifact record."""
+    import numpy as np
+    sc = resolve_scenario(sc)
+    plugin = get_operator_class(sc.operator.cls)
+    problem = build_problem(sc.operator)
+    t0 = time.perf_counter()
+    X, B, res = _solve_cell(sc, problem)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    oracle = plugin.oracle(problem, B, X, sc.tol)
+    rec = {
+        "scenario": sc.name,
+        "operator": sc.operator.to_dict(),
+        "method": sc.method, "substrate": sc.substrate,
+        "precond": sc.precond, "binding": sc.resolved_binding(),
+        "guard": bool(sc.guard), "recovery": bool(sc.recovery),
+        "tags": list(sc.tags),
+        "n": int(problem[0].shape[0]), "m": int(X.shape[1]),
+        "converged": bool(np.asarray(res.converged).all()),
+        "iterations": int(np.asarray(res.iterations).max()),
+        "oracle": oracle,
+        "wall_ms": round(wall_ms, 2),
+    }
+    if contracts:
+        rec["contracts"] = _check_contracts(sc, problem)
+    return rec
+
+
+def run_sweep(quick: bool = False,
+              only: Optional[Sequence[str]] = None,
+              tags: Optional[Sequence[str]] = None,
+              contracts: bool = True,
+              select: Optional[List[Scenario]] = None) -> dict:
+    """Sweep a registered subset of the matrix into one artifact dict.
+
+    ``only`` selects scenarios by name (unknown names raise
+    :class:`ScenarioError` with the registered list), ``tags`` filters
+    by tag, ``quick`` keeps the CI-sized cells; ``select`` bypasses the
+    registry with an explicit scenario list.
+    """
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    if select is not None:
+        chosen = [resolve_scenario(s) for s in select]
+    elif only:
+        chosen = [resolve_scenario(name) for name in only]
+    else:
+        chosen = registered_scenarios(
+            quick=quick, tags=tuple(tags) if tags else None)
+    if not chosen:
+        raise ScenarioError("no scenarios selected (registry empty or "
+                            "filters matched nothing)")
+
+    t0 = time.perf_counter()
+    cells = [run_cell(sc, contracts=contracts) for sc in chosen]
+    wall_s = time.perf_counter() - t0
+
+    n_oracle_ok = sum(c["oracle"]["ok"] for c in cells)
+    n_contracts_ok = sum(c.get("contracts", {}).get("ok", True)
+                         for c in cells)
+    art = {
+        "schema": ARTIFACT_SCHEMA,
+        "generated_at": datetime.now(timezone.utc).isoformat(),
+        "jax_version": jax.__version__,
+        "quick": bool(quick),
+        "n_devices": len(jax.devices()),
+        "contracts_checked": bool(contracts),
+        "summary": {
+            "n_cells": len(cells),
+            "n_converged": sum(c["converged"] for c in cells),
+            "n_oracle_ok": n_oracle_ok,
+            "n_contracts_ok": n_contracts_ok,
+            "wall_s": round(wall_s, 2),
+        },
+        "claims": {
+            "all_converged": all(c["converged"] for c in cells),
+            "all_oracle_ok": n_oracle_ok == len(cells),
+            "all_contracts_ok": n_contracts_ok == len(cells),
+        },
+        "cells": cells,
+    }
+    return art
+
+
+def write_artifact(art: dict, out: str = DEFAULT_OUT) -> str:
+    import os
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(art, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return out
+
+
+def sweep_table(art: dict) -> str:
+    """Human summary of one sweep artifact."""
+    headers = ["scenario", "operator", "method", "sub", "pc", "m",
+               "iters", "conv", "oracle", "contracts", "ms"]
+    rows = []
+    for c in art["cells"]:
+        rows.append([
+            c["scenario"], c["operator"]["cls"], c["method"],
+            c["substrate"], c["precond"] or "-", c["m"],
+            c["iterations"], "y" if c["converged"] else "N",
+            "ok" if c["oracle"]["ok"] else "FAIL",
+            ("ok" if c["contracts"]["ok"] else "DEVIATION")
+            if "contracts" in c else "-",
+            c["wall_ms"],
+        ])
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    lines = ["  ".join(str(h).ljust(w) for h, w in zip(headers, widths)),
+             "  ".join("-" * w for w in widths)]
+    lines += ["  ".join(str(v).ljust(w) for v, w in zip(r, widths))
+              for r in rows]
+    s = art["summary"]
+    lines.append("")
+    lines.append(f"{s['n_cells']} cells: {s['n_converged']} converged, "
+                 f"{s['n_oracle_ok']} oracle-verified, "
+                 f"{s['n_contracts_ok']} contract-clean "
+                 f"({s['wall_s']}s)")
+    return "\n".join(lines)

@@ -113,6 +113,17 @@ class SolveEngine:
         self._blocks.setdefault(canon, None)
         return name
 
+    def register_scenario(self, scenario,
+                          name: Optional[str] = None) -> str:
+        """Register a scenario (name or :class:`repro.scenarios
+        .Scenario`): its plugin-built operator + precond become a
+        resident block under the scenario's name."""
+        name = self.registry.register_scenario(scenario, name)
+        canon = self.registry[name].name
+        self._queues.setdefault(canon, deque())
+        self._blocks.setdefault(canon, None)
+        return name
+
     def submit(self, operator: str, b, *, tol: Optional[float] = None,
                maxiter: Optional[int] = None,
                deadline: Optional[float] = None) -> int:

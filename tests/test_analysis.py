@@ -325,13 +325,27 @@ def test_session_verify_contracts():
 def test_audit_golden_snapshot():
     """Pin the audit artifact schema and the expected pass/fail matrix
     for all 7 methods x 2 substrates (quick mode, in-process: the mesh
-    smoke runs trivially on the single pytest device)."""
+    smoke runs trivially on the single pytest device).  The cell list
+    is registry-driven: 60 dense acceptance cells + one contract row
+    per registered quick scenario + the 5 mesh smoke cells."""
+    from repro.analysis.audit import audit_specs
+    from repro.scenarios.cells import matrix_cells, scenario_cells
     art = run_audit(quick=True)
     assert art["schema"] == ARTIFACT_SCHEMA \
         == "repro.analysis/contract_audit/v1"
     assert art["ok"] is True
     assert art["deviations"] == []
-    assert art["n_cells"] == 65 and art["n_mesh_cells"] == 5
+    assert len(matrix_cells(quick=True)) == 60
+    n_scen = len(scenario_cells(quick=True))
+    assert n_scen >= 3       # the seed registrations incl. helmholtz
+    assert len(audit_specs(quick=True)) == 60 + n_scen
+    assert art["n_cells"] == 60 + n_scen + 5
+    assert art["n_mesh_cells"] == 5
+    assert art["n_scenario_cells"] == n_scen
+    # registry-driven rows carry their scenario name + operator class
+    helm = [r for r in art["reports"]
+            if r.get("operator_class") == "helmholtz_shifted"]
+    assert helm and all(not r["deviations"] for r in helm)
     assert tuple(art["methods"]) == METHOD_ORDER
     pipelined = {"p-bicgsafe", "p-bicgsafe-rr"}
     fused = pipelined | {"ssbicgsafe2"}

@@ -16,10 +16,12 @@ PUBLIC_API = [
     "ELLOperator",
     "GuardedSolver",
     "LinearSolver",
+    "OperatorSpec",
     "Preconditioner",
     "RecoveryPolicy",
     "SOLVERS",
     "SUBSTRATES",
+    "Scenario",
     "SolveResult",
     "SolveStatus",
     "SolverConfig",
@@ -27,13 +29,15 @@ PUBLIC_API = [
     "get_substrate",
     "make_solver",
     "operator_fingerprint",
+    "register_operator_class",
+    "register_scenario",
     "solve",
 ]
 
 # submodules that legitimately appear as attributes after import
 # (importing repro.api pulls these in); NOT part of the call surface
 _SUBMODULES = {"api", "core", "precond", "kernels", "resilience",
-               "observe"}
+               "observe", "scenarios"}
 
 
 def test_all_matches_snapshot():

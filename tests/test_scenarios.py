@@ -1,0 +1,297 @@
+"""repro.scenarios: registry semantics, serialization, cache-hitting
+binds, the operator-plugin protocol, and the sweep runner."""
+import json
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from repro.scenarios import (OperatorSpec, Scenario, ScenarioError,
+                             build_problem, get_operator_class,
+                             get_scenario, register_operator_class,
+                             register_scenario, resolve_scenario,
+                             scenario_names)
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_registries():
+    """Roll back registrations, the built-problem cache (a float32
+    problem cached here must not leak into an x64 test elsewhere), and
+    the global x64 flag (run_sweep flips it) after every test."""
+    import jax
+
+    from repro.scenarios import registry as R
+    ops = dict(R.OPERATOR_CLASSES)
+    scs = OrderedDict(R.SCENARIOS)
+    probs = OrderedDict(R._PROBLEMS)
+    x64_was = jax.config.jax_enable_x64
+    yield
+    R.OPERATOR_CLASSES.clear()
+    R.OPERATOR_CLASSES.update(ops)
+    R.SCENARIOS.clear()
+    R.SCENARIOS.update(scs)
+    R._PROBLEMS.clear()
+    R._PROBLEMS.update(probs)
+    jax.config.update("jax_enable_x64", x64_was)
+
+
+# ---------------------------------------------------------------------------
+# serialization: JSON <-> dataclass is lossless
+# ---------------------------------------------------------------------------
+
+def test_json_round_trip_lossless_for_every_registered_scenario():
+    for name in scenario_names():
+        sc = get_scenario(name)
+        assert Scenario.from_json(sc.to_json()) == sc
+        assert Scenario.from_dict(json.loads(sc.to_json())) == sc
+
+
+def test_json_round_trip_lossless_nondefault_fields():
+    sc = Scenario(
+        "rt", OperatorSpec.of("convection_diffusion", nx=9, peclet=2.0),
+        method="ssbicgsafe2", substrate="pallas", precond="jacobi",
+        tol=1e-10, maxiter=777, batch=1, binding="single",
+        trace=True, tags=("a", "b"), quick=False)
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc and back.operator.kwargs == {"nx": 9, "peclet": 2.0}
+
+
+def test_from_dict_rejects_unknown_and_missing_keys():
+    with pytest.raises(ScenarioError, match="unknown scenario keys"):
+        Scenario.from_dict({"name": "x", "operator": {"cls": "poisson3d"},
+                            "solvr": "p-bicgsafe"})
+    with pytest.raises(ScenarioError, match="missing required keys"):
+        Scenario.from_dict({"name": "x"})
+    with pytest.raises(ScenarioError, match="JSON scalar"):
+        OperatorSpec.of("poisson3d", nx=[8, 8])
+
+
+# ---------------------------------------------------------------------------
+# registry: conflict detection, validation messages
+# ---------------------------------------------------------------------------
+
+def test_duplicate_scenario_registration_raises():
+    sc = Scenario("dup-cell", OperatorSpec.of("poisson3d", nx=6))
+    assert register_scenario(sc) is sc
+    # equal content: idempotent (returns the existing registration)
+    assert register_scenario(
+        Scenario("dup-cell", OperatorSpec.of("poisson3d", nx=6))) is sc
+    with pytest.raises(ScenarioError, match="already registered"):
+        register_scenario(
+            Scenario("dup-cell", OperatorSpec.of("poisson3d", nx=7)))
+
+
+def test_duplicate_operator_class_registration_raises():
+    def build(**kw):
+        return build_problem("poisson3d", **kw)
+    register_operator_class("dup-op-class", build)
+    register_operator_class("dup-op-class", build)   # same builder: ok
+    with pytest.raises(ScenarioError, match="already registered"):
+        register_operator_class("dup-op-class", lambda **kw: None)
+
+
+def test_validation_names_the_valid_choices():
+    with pytest.raises(ScenarioError, match="unregistered operator class"):
+        register_scenario(Scenario("bad-op", OperatorSpec.of("nope")))
+    with pytest.raises(ScenarioError, match="unknown precond"):
+        register_scenario(Scenario(
+            "bad-pc", OperatorSpec.of("poisson3d", nx=6), precond="ilu"))
+    with pytest.raises(ScenarioError, match="unknown method"):
+        Scenario("bad-m", OperatorSpec.of("poisson3d", nx=6),
+                 method="gmres").validate()
+    with pytest.raises(ScenarioError, match="p-BiCGSafe iteration only"):
+        Scenario("bad-b", OperatorSpec.of("poisson3d", nx=6),
+                 method="bicgstab", batch=4).validate()
+    with pytest.raises(ScenarioError, match="unknown scenario"):
+        get_scenario("never-registered")
+    with pytest.raises(ScenarioError, match="unregistered operator class"):
+        build_problem("never-registered-class")
+    with pytest.raises(ScenarioError, match="not mesh-capable"):
+        register_scenario(Scenario(
+            "bad-mesh", OperatorSpec.of("hard_nonsym", n=50),
+            binding="mesh"))
+
+
+# ---------------------------------------------------------------------------
+# bind(): the PR-5 session cache, through the scenario layer
+# ---------------------------------------------------------------------------
+
+def test_bind_hits_session_cache_no_retrace(x64):
+    sc = get_scenario("poisson-jacobi")
+    s1 = sc.bind()
+    _, b, _ = sc.problem()
+    s1.solve(b)
+    traces = s1.stats["traces"]
+    assert traces >= 1
+    s2 = sc.bind()                      # same content -> SAME session
+    assert s2 is s1
+    s2.solve(b)                         # compiled program reused
+    assert s1.stats["traces"] == traces
+
+
+def test_make_solver_scenario_kwarg(x64):
+    import repro
+    sc = get_scenario("poisson-jacobi")
+    assert repro.make_solver(scenario="poisson-jacobi") is sc.bind()
+    # the scenario declares everything: other arguments are a loud error
+    with pytest.raises(TypeError, match="exclusive"):
+        repro.make_solver(scenario="poisson-jacobi", precond="jacobi")
+    with pytest.raises(ScenarioError, match="unknown scenario"):
+        repro.make_solver(scenario="never-registered")
+
+
+def test_resolve_scenario_passthrough_validates():
+    ad_hoc = Scenario("ad-hoc", OperatorSpec.of("poisson3d", nx=6))
+    assert resolve_scenario(ad_hoc) is ad_hoc
+    with pytest.raises(ScenarioError, match="unregistered operator"):
+        resolve_scenario(Scenario("ad-hoc2", OperatorSpec.of("zzz")))
+
+
+def test_built_problems_are_cached_per_spec_content():
+    p1 = build_problem("convection_diffusion", nx=8, peclet=1.0)
+    p2 = build_problem(OperatorSpec.of("convection_diffusion",
+                                      peclet=1.0, nx=8))
+    assert p1[0] is p2[0]               # param order is normalized
+
+
+# ---------------------------------------------------------------------------
+# the Helmholtz plugin: oracle + contracts, zero core edits
+# ---------------------------------------------------------------------------
+
+def test_helmholtz_session_verify_contracts(x64):
+    session = get_scenario("helmholtz-shifted").bind()
+    reports = session.verify_contracts()
+    assert reports and all(r.ok for r in reports)
+
+
+def test_helmholtz_solve_and_complex_oracle(x64):
+    sc = get_scenario("helmholtz-shifted")
+    plugin = get_operator_class("helmholtz_shifted")
+    problem = sc.problem()
+    op, b, x_true = problem
+    res = sc.bind().solve(b)
+    assert bool(res.converged)
+    X = np.asarray(res.x)[:, None]
+    B = np.asarray(b)[:, None]
+    verdict = plugin.oracle(problem, B, X, sc.tol)
+    assert verdict["ok"] and verdict["relres_complex"] < 1e-6
+    assert verdict["x_err_complex"] < 1e-6
+    # the oracle judges the COMPLEX system: flipping the imaginary half
+    # (a real-equivalent sign bug) must fail verification
+    X_bad = X.copy()
+    X_bad[op.stencil.n:] *= -1.0
+    assert not plugin.oracle(problem, B, X_bad, sc.tol)["ok"]
+
+
+def test_helmholtz_real_equivalent_algebra(x64):
+    op, b, x_true = build_problem("helmholtz_shifted", nx=6)
+    half = op.stencil.n
+    rng = np.random.default_rng(0)
+    z = rng.standard_normal(2 * half)
+    y = np.asarray(op.matvec(z))
+    # against straight complex arithmetic
+    zc = z[:half] + 1j * z[half:]
+    Lr = np.asarray(op.stencil.matvec(z[:half]))
+    Li = np.asarray(op.stencil.matvec(z[half:]))
+    yc = (Lr + 1j * Li) - 1j * float(op.eps) * zc
+    np.testing.assert_allclose(y[:half], yc.real, rtol=1e-12)
+    np.testing.assert_allclose(y[half:], yc.imag, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# service + audit integration
+# ---------------------------------------------------------------------------
+
+def test_engine_register_scenario(x64):
+    from repro.service import SolveEngine
+    eng = SolveEngine()
+    name = eng.register_scenario("poisson-jacobi")
+    assert name == "poisson-jacobi"
+    entry = eng.registry[name]
+    _, b, x_true = get_scenario("poisson-jacobi").problem()
+    rid = eng.submit(name, np.asarray(b))
+    results = {r.rid: r for r in eng.run()}
+    assert results[rid].converged
+    np.testing.assert_allclose(np.asarray(results[rid].x),
+                               np.asarray(x_true), atol=1e-6)
+    assert entry.n == len(np.asarray(b))
+
+
+def test_audit_negative_control_unregistered_class(tmp_path, capsys):
+    """Satellite: the audit CLI fails with a clear one-line message —
+    not a traceback — when a scenario file names an unregistered
+    operator class or an unknown precond."""
+    from repro.analysis.__main__ import main
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([{
+        "name": "negctl", "operator": {"cls": "no_such_class"}}]))
+    rc = main(["audit", "--quick", "--no-mesh", "--devices", "1",
+               "--scenarios", str(bad),
+               "--out", str(tmp_path / "a.json")])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "error:" in err and "no_such_class" in err \
+        and "registered classes" in err
+
+    bad.write_text(json.dumps([{
+        "name": "negctl2", "operator": {"cls": "poisson3d",
+                                        "params": {"nx": 6}},
+        "precond": "ilu"}]))
+    rc = main(["audit", "--quick", "--no-mesh", "--devices", "1",
+               "--scenarios", str(bad),
+               "--out", str(tmp_path / "a.json")])
+    assert rc == 2
+    assert "unknown precond 'ilu'" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# the sweep runner
+# ---------------------------------------------------------------------------
+
+def test_sweep_single_cell_artifact(x64):
+    from repro.scenarios.sweep import ARTIFACT_SCHEMA, run_sweep
+    art = run_sweep(only=["convdiff-baseline"])
+    assert art["schema"] == ARTIFACT_SCHEMA \
+        == "repro.scenarios/scenario_sweep/v1"
+    assert art["summary"]["n_cells"] == 1
+    assert art["claims"] == {"all_converged": True,
+                             "all_oracle_ok": True,
+                             "all_contracts_ok": True}
+    (cell,) = art["cells"]
+    assert cell["scenario"] == "convdiff-baseline"
+    assert cell["operator"]["cls"] == "convection_diffusion"
+    assert cell["oracle"]["ok"] and cell["contracts"]["ok"]
+
+
+def test_sweep_unknown_selection_raises():
+    from repro.scenarios.sweep import run_sweep
+    with pytest.raises(ScenarioError, match="unknown scenario"):
+        run_sweep(only=["no-such-cell"])
+    with pytest.raises(ScenarioError, match="matched nothing"):
+        run_sweep(tags=["no-such-tag"])
+
+
+def test_plugin_expected_outcome_deltas_are_honored():
+    """A plugin's contract_overrides REPLACE the expected status for its
+    cells.  bicgstab is a negative control: the default matrix expects
+    'violation' for the fused-reduction contract, so its cell is clean.
+    A plugin declaring 'ok' for that contract flips the expectation and
+    the same trace now counts as a deviation."""
+    from repro.scenarios.sweep import _check_contracts
+    plain = Scenario("delta-plain-cell",
+                     OperatorSpec.of("convection_diffusion", nx=6),
+                     method="bicgstab")
+    rec = _check_contracts(plain, plain.problem())
+    assert rec["ok"]                    # violation expected -> no deviation
+
+    register_operator_class(
+        "delta-probe", lambda **kw: build_problem("convection_diffusion",
+                                                  nx=6),
+        contract_overrides={"one_reduction_per_iteration": "ok"})
+    sc = Scenario("delta-probe-cell", OperatorSpec.of("delta-probe"),
+                  method="bicgstab")
+    rec = _check_contracts(sc, sc.problem())
+    assert not rec["ok"]                # plugin's delta is now violated
+    assert rec["deviations"][0]["contract"] == \
+        "one_reduction_per_iteration"
+    assert rec["deviations"][0]["expected"] == "ok"
